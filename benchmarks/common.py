@@ -1,0 +1,30 @@
+"""Shared benchmark utilities."""
+import json
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+REPORT_DIR = os.path.join(os.path.dirname(__file__), "..", "reports")
+
+
+def save_report(name: str, data):
+    os.makedirs(REPORT_DIR, exist_ok=True)
+    with open(os.path.join(REPORT_DIR, name + ".json"), "w") as f:
+        json.dump(data, f, indent=1, default=str)
+
+
+def timed(fn, *args, **kw):
+    t0 = time.time()
+    out = fn(*args, **kw)
+    return out, time.time() - t0
+
+
+def print_table(title, headers, rows):
+    print(f"\n== {title} ==")
+    widths = [max(len(str(h)), max((len(str(r[i])) for r in rows),
+                                   default=0)) for i, h in enumerate(headers)]
+    print("  ".join(str(h).ljust(w) for h, w in zip(headers, widths)))
+    for r in rows:
+        print("  ".join(str(c).ljust(w) for c, w in zip(r, widths)))

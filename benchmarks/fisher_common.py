@@ -1,0 +1,29 @@
+"""Fisher-information estimation glue for the float models."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core import fisher as FI
+from repro.models import model as MDL
+from repro.models.layers import ShardCfg
+
+SH = ShardCfg(dp=("data",), tp_size=1, dp_size=1)
+
+
+def fisher_scores_for(cfg, params, rng, batch=2, seq=16, n_samples=2
+                      ) -> FI.FisherScores:
+    toks = jax.random.randint(rng, (batch, seq), 0, cfg.vocab)
+
+    def logprob_fn(layer_params, inputs, rng_s):
+        p = dict(params)
+        p["layers"] = layer_params
+        logits, _, _ = MDL.forward(cfg, SH, p, inputs)
+        logits = logits.astype(jnp.float32)[..., :cfg.vocab]
+        y = jax.lax.stop_gradient(
+            jax.random.categorical(rng_s, logits))
+        logz = jax.scipy.special.logsumexp(logits, axis=-1)
+        ll = jnp.take_along_axis(logits, y[..., None], axis=-1)[..., 0]
+        return jnp.mean(ll - logz)
+
+    return FI.fisher_from_logprob_fn(logprob_fn, params["layers"], toks,
+                                     rng, n_samples=n_samples)

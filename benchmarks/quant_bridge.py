@@ -1,0 +1,93 @@
+"""Bridge: float model parameters -> quantized block weights (16-bit f8).
+
+Converts a trained gpt2-family float model (models/model.py tree) into
+the per-layer integer weight dicts the provable pipeline (core/blocks.py)
+consumes. This is the deployment step: the SERVED model after this
+conversion is bit-identical to what the circuit proves.
+"""
+import numpy as np
+import jax.numpy as jnp
+
+from repro.core import blocks as B
+from repro.core import quantize as QZ
+
+
+def _q(x) -> np.ndarray:
+    return np.asarray(QZ.quantize(jnp.asarray(x, jnp.float32)),
+                      dtype=np.int64)
+
+
+def block_cfg_of(cfg_model, seq: int) -> B.BlockCfg:
+    fam = "gpt2" if cfg_model.norm == "layernorm" else "llama"
+    return B.BlockCfg(family=fam, d=cfg_model.d, dff=cfg_model.d_ff,
+                      heads=cfg_model.heads, kv_heads=cfg_model.kv_heads,
+                      dh=cfg_model.dh, seq=seq)
+
+
+def quantize_layer(cfg_model, lp, bcfg: B.BlockCfg):
+    """One float layer dict -> blocks.py weight dict (padded, int f8)."""
+    shapes = B.weight_shapes(bcfg)
+    out = {}
+
+    def put(name, arr):
+        tgt = np.zeros(shapes[name], dtype=np.int64)
+        a = _q(arr)
+        sl = tuple(slice(0, s) for s in a.shape)
+        tgt[sl] = a
+        out[name] = tgt
+
+    put("wqT", np.asarray(lp["mix"]["wq"], np.float32).T)
+    put("wkT", np.asarray(lp["mix"]["wk"], np.float32).T)
+    put("wvT", np.asarray(lp["mix"]["wv"], np.float32).T)
+    put("woT", np.asarray(lp["mix"]["wo"], np.float32).T)
+    put("w1T", np.asarray(lp["ffn"]["w1"], np.float32).T)
+    put("w2T", np.asarray(lp["ffn"]["w2"], np.float32).T)
+    if bcfg.family == "llama":
+        put("w3T", np.asarray(lp["ffn"]["w3"], np.float32).T)
+        put("g1", 1.0 + np.asarray(lp["n1"]["g"], np.float32))
+        put("g2", 1.0 + np.asarray(lp["n2"]["g"], np.float32))
+    else:
+        put("bq", np.asarray(lp["mix"]["bq"], np.float32))
+        put("bk", np.asarray(lp["mix"]["bk"], np.float32))
+        put("bv", np.asarray(lp["mix"]["bv"], np.float32))
+        put("bo", np.zeros(bcfg.d))
+        put("b1f", np.zeros(bcfg.dff))
+        put("b2f", np.zeros(bcfg.d))
+        put("g1", 1.0 + np.asarray(lp["n1"]["g"], np.float32))
+        put("be1", np.asarray(lp["n1"]["b"], np.float32))
+        put("g2", 1.0 + np.asarray(lp["n2"]["g"], np.float32))
+        put("be2", np.asarray(lp["n2"]["b"], np.float32))
+    return out
+
+
+def quantized_forward_logits(cfg_model, params, bcfgs, qweights, tokens,
+                             positions=None):
+    """Embed (float) -> quantized blocks -> final norm + head (float).
+
+    tokens: (B, S). Returns float logits; the block stack runs the EXACT
+    integer pipeline (qops), i.e. the provable computation.
+    """
+    import jax
+    from repro.models import model as MDL
+    from repro.models.layers import ShardCfg, apply_norm
+    B_, S = tokens.shape
+    sh = ShardCfg(dp=("data",), tp_size=1, dp_size=1)
+    emb = np.asarray(params["embed"], np.float32)[np.asarray(tokens)]
+    if cfg_model.pos_embed:
+        emb = emb + np.asarray(params["pos"], np.float32)[
+            np.arange(S) % cfg_model.pos_embed]
+    logits_all = []
+    d_pad = bcfgs[0].d_pad
+    for b in range(B_):
+        h = np.zeros((d_pad, S), dtype=np.int64)
+        h[:cfg_model.d] = _q(emb[b].T)
+        for bcfg, w in zip(bcfgs, qweights):
+            h, _ = B.block_forward(bcfg, w, h)
+        hf = h[:cfg_model.d].T / QZ.SCALE                 # (S, d) float
+        hn = apply_norm(cfg_model.norm, params["final_norm"],
+                        jnp.asarray(hf, jnp.float32)[None])[0]
+        head = (params["embed"].T if cfg_model.tie_embeddings
+                else params["lm_head"])
+        logits_all.append(np.asarray(
+            hn @ np.asarray(head, np.float32), np.float32))
+    return np.stack(logits_all)

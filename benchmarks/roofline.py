@@ -1,0 +1,95 @@
+"""Roofline report: reads reports/dryrun/*.json, emits the §Roofline table.
+
+Per (arch x shape x mesh): the three terms in seconds, the dominant
+bottleneck, MODEL_FLOPS = 6 N D (train) / 2 N_active D (decode/prefill),
+and the useful-compute ratio MODEL/HLO (remat/redundancy waste catch).
+"""
+import glob
+import json
+import os
+
+from benchmarks.common import print_table, save_report
+
+PARAMS = {   # total / active parameter counts (computed from configs)
+}
+
+
+def _param_counts(arch):
+    from repro.configs import get_arch
+    cfg = get_arch(arch).cfg
+    d, ff, V = cfg.d, cfg.d_ff, cfg.vocab_padded
+    qd = cfg.heads * cfg.dh
+    kvd = cfg.kv_heads * cfg.dh
+    total = V * d * (1 if cfg.tie_embeddings else 2)
+    active = total
+    for spec in cfg.layers:
+        if spec.kind == "attn":
+            attn = d * qd + 2 * d * kvd + qd * d
+        elif spec.kind == "mamba":
+            attn = d * 4 * d + 2 * d * (d // 16 + 32)
+        else:
+            attn = 4 * d * d
+        total += attn
+        active += attn
+        if spec.moe:
+            eff = cfg.moe_ff or ff
+            n_mats = 3 if cfg.gated_mlp else 2
+            total += cfg.n_experts * n_mats * d * eff
+            active += cfg.top_k * n_mats * d * eff
+        elif ff:
+            n_mats = 3 if cfg.gated_mlp else 2
+            total += n_mats * d * ff
+            active += n_mats * d * ff
+    return total, active
+
+
+def model_flops(arch, shape_rec):
+    shape = shape_rec["shape"]
+    total, active = _param_counts(arch)
+    if shape == "train_4k":
+        tokens = 4096 * 256
+        return 6 * active * tokens
+    if shape == "prefill_32k":
+        return 2 * active * 32768 * 32
+    if shape == "decode_32k":
+        return 2 * active * 128
+    return 2 * active * 1
+
+
+def run(ci: bool = False, out_dir: str = None):
+    if out_dir is None:
+        out_dir = ("reports/dryrun_final"
+                   if glob.glob("reports/dryrun_final/*.json")
+                   else "reports/dryrun")
+    rows = []
+    data = {}
+    for path in sorted(glob.glob(os.path.join(out_dir, "*.json"))):
+        r = json.load(open(path))
+        if r.get("status") != "ok":
+            continue
+        arch, shape, mesh = r["arch"], r["shape"], r["mesh"]
+        if mesh != "16x16":
+            continue                      # roofline table is single-pod
+        mf = model_flops(arch, r)
+        hlo_total = r["hlo_flops_per_dev"] * r["n_chips"]
+        ratio = mf / hlo_total if hlo_total else 0.0
+        frac = max(r["compute_s"], 1e-12) / max(
+            r["compute_s"], r["memory_s"], r["collective_s"])
+        rows.append([
+            f"{arch}.{shape}",
+            f"{r['compute_s']*1e3:.2f}", f"{r['memory_s']*1e3:.2f}",
+            f"{r['collective_s']*1e3:.2f}",
+            r["bottleneck"].replace("_s", ""),
+            f"{ratio:.2f}", f"{frac:.2f}"])
+        data[f"{arch}.{shape}"] = dict(
+            r, model_flops=mf, useful_ratio=ratio, roofline_frac=frac)
+    rows.sort()
+    print_table("Roofline (single-pod 16x16, per step, v5e constants)",
+                ["cell", "compute ms", "memory ms", "collective ms",
+                 "bottleneck", "MODEL/HLO", "compute/max"], rows)
+    save_report("roofline", data)
+    return data
+
+
+if __name__ == "__main__":
+    run()

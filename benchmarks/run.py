@@ -1,0 +1,55 @@
+"""Benchmark runner: python -m benchmarks.run [--full]
+
+CI sizes by default (minutes on CPU); --full uses paper-scale widths.
+One module per paper table (DESIGN.md §7 experiment index) + the
+roofline report from the dry-run artifacts.
+"""
+import argparse
+import sys
+import time
+import traceback
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--only", default=None,
+                    help="comma-separated table names, e.g. table1,table5")
+    args = ap.parse_args()
+    ci = not args.full
+
+    from benchmarks import (roofline, table1_lut_errors, table2_fisher,
+                            table3_block_proof, table4_monolithic,
+                            table5_ppl, table6_mlp_scaling)
+    modules = {
+        "table1": table1_lut_errors,
+        "table2": table2_fisher,
+        "table3": table3_block_proof,
+        "table4": table4_monolithic,
+        "table5": table5_ppl,
+        "table6": table6_mlp_scaling,
+        "roofline": roofline,
+    }
+    if args.only:
+        names = args.only.split(",")
+    else:
+        names = list(modules)
+    failures = []
+    for name in names:
+        t0 = time.time()
+        print(f"\n########## {name} ##########", flush=True)
+        try:
+            modules[name].run(ci=ci)
+            print(f"[{name}] done in {time.time()-t0:.1f}s", flush=True)
+        except Exception:  # noqa: BLE001
+            failures.append(name)
+            traceback.print_exc()
+    if failures:
+        print(f"\nFAILED: {failures}")
+        return 1
+    print("\nAll benchmarks complete. Reports in ./reports/")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

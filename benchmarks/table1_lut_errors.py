@@ -1,0 +1,31 @@
+"""Table 1: lookup table approximation errors (16-bit precision)."""
+from benchmarks.common import print_table, save_report
+
+
+PAPER = {"exp": ("[-4, 4]", 9e-6, 0.0025),
+         "gelu": ("[-8, 8]", 5e-5, 0.0003),
+         "silu": ("[-8, 8]", 1e-4, 0.0002),
+         "rsqrt": ("[0.01, 10]", 6e-5, 0.0001)}
+
+
+def run(ci: bool = False):
+    from repro.core import luts
+    rows = []
+    data = {}
+    n = 50_001 if ci else 400_001
+    for name in ("exp", "gelu", "silu", "rsqrt", "sigmoid", "softplus"):
+        max_abs, mean_rel = luts.measured_errors(name, n_samples=n)
+        paper = PAPER.get(name)
+        rows.append([name, f"{max_abs:.2e}", f"{mean_rel*100:.4f}%",
+                     f"{paper[1]:.0e}" if paper else "-",
+                     f"{paper[2]*100:.2f}%" if paper else "-"])
+        data[name] = {"max_abs": max_abs, "mean_rel": mean_rel}
+    print_table("Table 1: LUT approximation errors",
+                ["op", "max abs (ours)", "mean rel (ours)",
+                 "max abs (paper)", "mean rel (paper)"], rows)
+    save_report("table1_lut_errors", data)
+    return data
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,1 @@
+from .base import ARCHS, get_arch, input_specs, SHAPES  # noqa: F401

@@ -1,0 +1,81 @@
+"""Architecture registry + input shape specs for the 40 dry-run cells.
+
+Each assigned architecture contributes (full config, reduced smoke config,
+shape skip-list with reasons). Shapes follow the brief:
+  train_4k     seq 4096  x global_batch 256   (train_step)
+  prefill_32k  seq 32768 x global_batch 32    (prefill forward)
+  decode_32k   one token, KV len 32768, batch 128 (serve_step)
+  long_500k    one token, KV len 524288, batch 1  (sub-quadratic only)
+
+Skip rules (DESIGN.md §4): long_500k runs only for jamba / xlstm / gemma3;
+whisper substitutes its native decoder context (448).
+"""
+from __future__ import annotations
+
+import dataclasses
+import importlib
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models.model import ModelCfg
+
+SHAPES = {
+    "train_4k": dict(seq=4096, batch=256, mode="train"),
+    "prefill_32k": dict(seq=32768, batch=32, mode="prefill"),
+    "decode_32k": dict(seq=32768, batch=128, mode="decode"),
+    "long_500k": dict(seq=524288, batch=1, mode="decode"),
+}
+
+ARCHS = [
+    "qwen1_5_0_5b", "deepseek_coder_33b", "granite_3_8b", "gemma3_1b",
+    "jamba_v0_1_52b", "whisper_small", "xlstm_350m", "grok_1_314b",
+    "moonshot_v1_16b_a3b", "qwen2_vl_72b",
+    # paper's own evaluation families
+    "gpt2_small", "tinyllama_1_1b",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class ArchBundle:
+    cfg: ModelCfg
+    smoke: ModelCfg
+    skip: Dict[str, str]                    # shape -> reason
+    overrides: Dict[str, Dict] = dataclasses.field(default_factory=dict)
+
+    def shape_params(self, shape: str) -> Optional[Dict]:
+        if shape in self.skip:
+            return None
+        base = dict(SHAPES[shape])
+        base.update(self.overrides.get(shape, {}))
+        return base
+
+
+def get_arch(name: str) -> ArchBundle:
+    name = name.replace("-", "_").replace(".", "_")
+    mod = importlib.import_module(f"repro.configs.{name}")
+    return mod.BUNDLE
+
+
+def input_specs(cfg: ModelCfg, shape_params: Dict, dp_axes=("data",),
+                multi_pod: bool = False) -> Dict:
+    """ShapeDtypeStructs (+ PartitionSpecs) for one dry-run cell.
+
+    Weak-type-correct stand-ins: no device allocation happens here.
+    """
+    seq, batch, mode = (shape_params["seq"], shape_params["batch"],
+                        shape_params["mode"])
+    dp = dp_axes if batch % 16 == 0 else None
+    tok = jax.ShapeDtypeStruct((batch, seq), jnp.int32)
+    if mode == "train":
+        return {"tokens": tok, "labels": tok,
+                "specs": {"tokens": P(dp, None), "labels": P(dp, None)}}
+    if mode == "prefill":
+        return {"tokens": tok, "specs": {"tokens": P(dp, None)}}
+    # decode: one new token against a cache of length `seq`
+    return {"token": jax.ShapeDtypeStruct((batch, 1), jnp.int32),
+            "pos": jax.ShapeDtypeStruct((batch,), jnp.int32),
+            "cache_len": seq,
+            "specs": {"token": P(dp, None), "pos": P(dp)}}

@@ -1,0 +1,158 @@
+"""Commitment chain + compositional soundness (paper §3, Theorem 3.1).
+
+A ModelProof is the composite (pi_0 ... pi_{L-1}) plus the boundary
+commitment roots (c_0 ... c_L). Verification checks:
+  1. every layer proof verifies against its published weight root,
+  2. adjacent proofs share boundary roots:  c_out(pi_l) == c_in(pi_{l+1})
+     (Eq. 3 — this is what kills mix-and-match attacks),
+  3. the claimed input/output commitments match the user's query binding.
+
+`soundness_bound` reproduces the Thm 3.1 accounting for OUR per-layer
+proof system (sum-checks over Fp4 + Ligero PCS + LogUp + Poseidon2), i.e.
+eps_total <= sum_l eps_l + (L+2) * negl(lambda) with eps_l summed from the
+component soundness errors below.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict, List, Optional, Sequence
+
+import numpy as np
+
+from . import blocks as B
+from . import field as F
+from . import layer_proof as LP
+from . import pcs as PCS
+
+
+@dataclasses.dataclass
+class ModelProof:
+    layer_proofs: List[LP.LayerProof]
+    boundary_roots: List[np.ndarray]     # c_0 .. c_L
+    wt_roots: List[np.ndarray]
+
+    def size_bytes(self) -> int:
+        return sum(p.size_bytes() for p in self.layer_proofs)
+
+
+def prove_model(cfgs: Sequence[B.BlockCfg],
+                weights_raw: Sequence[Dict[str, np.ndarray]],
+                wt_commits: Sequence[LP.WeightCommit],
+                x0: np.ndarray, params: PCS.PCSParams,
+                layer_subset: Optional[Sequence[int]] = None) -> ModelProof:
+    """Run the quantized forward chain and prove every (selected) layer.
+
+    Layer proofs are independent given the boundary commitments (paper
+    §3.3) — in the distributed runtime they are generated in parallel
+    across the mesh (launch/serve.py); here sequentially.
+    """
+    L = len(cfgs)
+    h = x0
+    boundaries = [LP.commit_boundary(cfgs[0], x0, params)]
+    traces = []
+    for l in range(L):
+        h, tr = B.block_forward(cfgs[l], weights_raw[l], h)
+        traces.append(tr)
+        boundaries.append(LP.commit_boundary(cfgs[min(l + 1, L - 1)], h,
+                                             params))
+    subset = range(L) if layer_subset is None else layer_subset
+    proofs = []
+    for l in subset:
+        proofs.append(LP.prove_layer(cfgs[l], l, wt_commits[l],
+                                     boundaries[l], boundaries[l + 1],
+                                     traces[l], params,
+                                     check_input_range=(l == 0)))
+    return ModelProof(layer_proofs=proofs,
+                      boundary_roots=[b.root for b in boundaries],
+                      wt_roots=[w.root for w in wt_commits])
+
+
+def verify_model(cfgs: Sequence[B.BlockCfg], proof: ModelProof,
+                 wt_roots: Sequence[np.ndarray], params: PCS.PCSParams,
+                 in_root: Optional[np.ndarray] = None,
+                 out_root: Optional[np.ndarray] = None) -> bool:
+    """Full composite verification incl. the Eq. 3 adjacency checks."""
+    # query binding
+    if in_root is not None and not np.array_equal(
+            proof.boundary_roots[0], in_root):
+        return False
+    if out_root is not None and not np.array_equal(
+            proof.boundary_roots[-1], out_root):
+        return False
+    for lp in proof.layer_proofs:
+        l = lp.layer_index
+        # Eq. 3: commitment-chain adjacency
+        if not np.array_equal(lp.in_root, proof.boundary_roots[l]):
+            return False
+        if not np.array_equal(lp.out_root, proof.boundary_roots[l + 1]):
+            return False
+        if not LP.verify_layer(cfgs[l], lp, wt_roots[l], params,
+                               check_input_range=(l == 0)):
+            return False
+    return True
+
+
+# ---------------------------------------------------------------------------
+# Theorem 3.1 accounting for this proof system.
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass
+class SoundnessReport:
+    eps_layer: float
+    eps_total: float
+    bits_layer: float
+    bits_total: float
+    components: Dict[str, float]
+
+
+def layer_circuit_stats(cfg: B.BlockCfg) -> Dict[str, int]:
+    """Conservative counts of soundness-relevant events per layer proof."""
+    H, seq = cfg.heads, cfg.seq
+    n_matmul = 3 + 2 * H + 2 + (1 if cfg.family == "llama" else 0)
+    n_sumchecks = 9 * n_matmul + 30 + (8 * H if cfg.family == "llama" else 0)
+    max_vars = max((cfg.dff_pad * cfg.seq).bit_length(),
+                   (H * seq * seq).bit_length()) + 3
+    n_lookups = 5
+    n_openings = 16
+    n_relations = 40
+    return dict(n_sumchecks=n_sumchecks, max_vars=max_vars,
+                n_lookups=n_lookups, n_openings=n_openings,
+                n_relations=n_relations,
+                witness=8 * cfg.dff_pad * cfg.seq + 12 * H * seq * seq)
+
+
+def soundness_bound(cfgs: Sequence[B.BlockCfg], params: PCS.PCSParams
+                    ) -> SoundnessReport:
+    """eps_total <= sum_l eps_l + (L+2) negl  (Thm 3.1), with eps_l from:
+
+    * sum-checks: rounds * degree / |Fp4|      (Schwartz-Zippel per round)
+    * LogUp: (witness + table) / |Fp4|         (pole collision on alpha)
+    * linear relations: 1 claim point each: max_vars / |Fp4|
+    * Ligero PCS: ((1+rho)/2)^queries per opening session
+    * Poseidon2 collision resistance: 2^-124 (capacity 248 bits, birthday)
+    """
+    f4 = float(F.P) ** 4
+    eps_total = 0.0
+    comp = dict(sumcheck=0.0, logup=0.0, relations=0.0, pcs=0.0)
+    for cfg in cfgs:
+        st = layer_circuit_stats(cfg)
+        e_sc = st["n_sumchecks"] * st["max_vars"] * 4 / f4
+        e_lu = st["n_lookups"] * (st["witness"] + 2 ** 16) / f4
+        e_rel = st["n_relations"] * st["max_vars"] / f4
+        rho = 1.0 / params.blowup
+        e_pcs = st["n_openings"] * ((1 + rho) / 2) ** params.queries
+        comp["sumcheck"] += e_sc
+        comp["logup"] += e_lu
+        comp["relations"] += e_rel
+        comp["pcs"] += e_pcs
+        eps_total += e_sc + e_lu + e_rel + e_pcs
+    L = len(cfgs)
+    negl_hash = (L + 2) * 2.0 ** -124
+    eps_total += negl_hash
+    comp["hash"] = negl_hash
+    eps_layer = eps_total / max(L, 1)
+    return SoundnessReport(
+        eps_layer=eps_layer, eps_total=eps_total,
+        bits_layer=-math.log2(eps_layer) if eps_layer else float("inf"),
+        bits_total=-math.log2(eps_total) if eps_total else float("inf"),
+        components=comp)

@@ -1,0 +1,807 @@
+"""Circuit framework: view algebra + proof context + gadgets.
+
+This realizes the paper's per-layer arithmetic circuit (§3.1, Eq. 2) in
+sum-check form. A layer proof is a deterministic SEQUENCE of gadget calls,
+executed identically by prover and verifier over a shared Fiat-Shamir
+transcript; the prover additionally writes values/sub-proofs to a `tape`
+that the verifier consumes in order.
+
+Witness architecture (DESIGN.md §2, "circuit quantization"):
+* Every private witness value lives as **8-bit slices** inside one of a few
+  PCS commitments (the per-layer aux commitment, the boundary activation
+  commitments shared with adjacent layers, and the per-layer weight
+  commitment from setup). 16-bit activations are (hi, lo) limb pairs.
+* One value-mode LogUp instance per commitment proves ALL of its entries
+  are in [0, 256) — this single range check is what pins every committed
+  integer exactly, which in turn makes all mod-p gadget relations integer
+  relations (every relation's bound is asserted < p/2 at build time).
+* Wider quantities (activations, accumulator terms, rescale errors) are
+  *virtual*: Affine views over slices. Views evaluate MLEs by linearity,
+  so virtual quantities never need their own commitments or openings.
+
+Gadgets reduce every statement to MLE evaluation claims on committed
+vectors, which are discharged in one batched PCS opening per commitment at
+finalize().
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import OrderedDict
+from typing import Dict, List, Optional, Sequence, Tuple, Union
+
+import numpy as np
+import jax.numpy as jnp
+
+from . import field as F
+from . import lookup as LK
+from . import luts as LUTS
+from . import pcs as PCS
+from . import sumcheck as SC
+from .mle import (eq_eval, eq_points, fsum, mle_eval_base, mle_eval_f4,
+                  partial_eval_cols, partial_eval_rows)
+from .transcript import Transcript
+
+INV2 = (F.P + 1) // 2    # field inverse of 2 as a canonical int
+
+
+class ProofError(Exception):
+    """Raised by the verifier on any failed check."""
+
+
+# ---------------------------------------------------------------------------
+# View algebra. All views are integer-valued (embedded mod p) vectors of
+# length 2^log_n. Claims on views decompose to claims on committed slices.
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class Slice:
+    com: str                  # commitment name
+    offset: int               # element offset, multiple of 2^log_n
+    log_n: int
+
+    def __post_init__(self):
+        assert self.offset % (1 << self.log_n) == 0, "unaligned slice"
+
+
+@dataclasses.dataclass(frozen=True)
+class Affine:
+    terms: Tuple[Tuple[int, "View"], ...]   # (field-const coef, view)
+    const: int = 0                          # field constant added entrywise
+    log_n: Optional[int] = None             # required if terms empty
+
+
+@dataclasses.dataclass(frozen=True)
+class BcastCols:
+    """Each element of base repeated 2^extra times (base indexes high bits)."""
+    base: "View"
+    extra: int
+
+
+@dataclasses.dataclass(frozen=True)
+class BcastRows:
+    """Base vector tiled 2^extra times (base indexes low bits)."""
+    base: "View"
+    extra: int
+
+
+@dataclasses.dataclass(frozen=True)
+class Public:
+    """A public integer vector known to both sides (masks, positions)."""
+    values: tuple                 # hashable: tuple of ints
+    name: str = ""
+
+
+@dataclasses.dataclass(frozen=True)
+class Concat:
+    """Concatenation of equal-sized views (e.g. batched LUT witnesses)."""
+    parts: Tuple["View", ...]
+
+    def __post_init__(self):
+        n = len(self.parts)
+        assert n & (n - 1) == 0, "Concat needs a power-of-two part count"
+        sizes = {view_log_n(p) for p in self.parts}
+        assert len(sizes) == 1, "Concat parts must be equal-sized"
+
+
+View = Union[Slice, Affine, BcastCols, BcastRows, Public]
+
+
+def view_log_n(v: View) -> int:
+    if isinstance(v, Slice):
+        return v.log_n
+    if isinstance(v, Affine):
+        if v.terms:
+            return view_log_n(v.terms[0][1])
+        return v.log_n
+    if isinstance(v, BcastCols) or isinstance(v, BcastRows):
+        return view_log_n(v.base) + v.extra
+    if isinstance(v, Concat):
+        return view_log_n(v.parts[0]) + (len(v.parts).bit_length() - 1)
+    if isinstance(v, Public):
+        n = len(v.values)
+        ln = n.bit_length() - 1
+        assert 1 << ln == n
+        return ln
+    raise TypeError(v)
+
+
+def scaled(v: View, c: int) -> Affine:
+    return Affine(terms=((c % F.P, v),))
+
+
+def subslice(sl: Slice, offset_elems: int, log_n: int) -> Slice:
+    """A contiguous sub-range of an existing slice (offsets compose)."""
+    return Slice(sl.com, sl.offset + offset_elems, log_n)
+
+
+def vadd(*vs: View) -> Affine:
+    return Affine(terms=tuple((1, v) for v in vs))
+
+
+def vaff(terms, const=0) -> Affine:
+    return Affine(terms=tuple((c % F.P, v) for c, v in terms), const=const % F.P)
+
+
+# ---------------------------------------------------------------------------
+# Shared context machinery.
+# ---------------------------------------------------------------------------
+class _Ctx:
+    """State shared by prover/verifier contexts."""
+
+    def __init__(self, transcript: Transcript, params: PCS.PCSParams):
+        self.tr = transcript
+        self.params = params
+        self.claims: "OrderedDict[str, List[Tuple[np.ndarray, np.ndarray]]]" = OrderedDict()
+        self.roots: Dict[str, np.ndarray] = {}
+        self.shapes: Dict[str, Tuple[int, int]] = {}   # name -> (log_r, log_c)
+        self._claim_cache: Dict[Tuple, np.ndarray] = {}
+
+    # -- leaf claims --------------------------------------------------------
+    def _leaf_claim(self, com: str, point: jnp.ndarray) -> jnp.ndarray:
+        key = (com, np.asarray(point).tobytes())
+        if key in self._claim_cache:
+            return jnp.asarray(self._claim_cache[key])
+        value = self._leaf_claim_impl(com, point)
+        self.tr.absorb(value)
+        self.claims.setdefault(com, []).append(
+            (np.asarray(point), np.asarray(value)))
+        self._claim_cache[key] = np.asarray(value)
+        return value
+
+    def _prefix_point(self, sl: Slice, point: jnp.ndarray) -> jnp.ndarray:
+        """Full-commitment point for a slice claim: const prefix ++ point."""
+        log_total = sum(self.shapes[sl.com])
+        npfx = log_total - sl.log_n
+        idx = sl.offset >> sl.log_n
+        bits = [(idx >> (npfx - 1 - j)) & 1 for j in range(npfx)]
+        pfx = jnp.stack([F.f4_from_base(F.fconst(b)) for b in bits]) \
+            if npfx else jnp.zeros((0, 4), jnp.uint32)
+        return jnp.concatenate([pfx, point]) if npfx else point
+
+    # -- view claims ---------------------------------------------------------
+    def claim(self, v: View, point: jnp.ndarray) -> jnp.ndarray:
+        """MLE evaluation claim of a view at `point`, decomposed to leaves."""
+        if isinstance(v, Slice):
+            return self._leaf_claim(v.com, self._prefix_point(v, point))
+        if isinstance(v, Affine):
+            acc = F.f4_from_base(F.fconst(v.const))
+            for c, sub in v.terms:
+                sval = self.claim(sub, point)
+                acc = F.f4add(acc, F.f4mul(F.f4_from_base(F.fconst(c)),
+                                           sval))
+            return acc
+        if isinstance(v, BcastCols):
+            base_n = view_log_n(v.base)
+            return self.claim(v.base, point[:base_n])
+        if isinstance(v, BcastRows):
+            return self.claim(v.base, point[v.extra:])
+        if isinstance(v, Concat):
+            b = len(v.parts).bit_length() - 1
+            eq = eq_points(point[:b])            # (2^b, 4)
+            acc = F.f4zero(())
+            for i, part in enumerate(v.parts):
+                sub = self.claim(part, point[b:])
+                acc = F.f4add(acc, F.f4mul(eq[i], sub))
+            return acc
+        if isinstance(v, Public):
+            vec = F.f_from_int(np.array(v.values, dtype=np.int64))
+            return mle_eval_base(vec, point)
+        raise TypeError(v)
+
+    def check_eq(self, a, b, what: str):
+        if not np.array_equal(np.asarray(a), np.asarray(b)):
+            raise ProofError(f"relation failed: {what}")
+
+    def challenge_point(self, n: int) -> jnp.ndarray:
+        return self.tr.challenge_f4_vec(n)
+
+
+class ProverCtx(_Ctx):
+    is_prover = True
+
+    def __init__(self, transcript, params):
+        super().__init__(transcript, params)
+        self.tape: List = []
+        self.coms: Dict[str, PCS.Commitment] = {}
+        self.ints: Dict[str, np.ndarray] = {}     # committed int values
+
+    # -- commitments ---------------------------------------------------------
+    def commit(self, name: str, values: np.ndarray):
+        """Commit an integer vector (padded to 2^m) under `name`."""
+        n = len(values)
+        total = 1 << max((n - 1).bit_length(), 0) if n > 1 else 1
+        vals = np.zeros(total, dtype=np.int64)
+        vals[:n] = values
+        com = PCS.commit(F.f_from_int(vals), self.params)
+        self.coms[name] = com
+        self.ints[name] = vals
+        self.roots[name] = com.root
+        self.shapes[name] = (com.log_r, com.log_c)
+        self.tape.append(("root", name, com.root))
+        self.tr.absorb(jnp.asarray(com.root))
+
+    def attach(self, name: str, com: PCS.Commitment, ints: np.ndarray):
+        """Attach an externally-created commitment (boundary/weights)."""
+        self.coms[name] = com
+        self.ints[name] = ints
+        self.roots[name] = com.root
+        self.shapes[name] = (com.log_r, com.log_c)
+        self.tr.absorb(jnp.asarray(com.root))
+
+    def _leaf_claim_impl(self, com: str, point: jnp.ndarray) -> jnp.ndarray:
+        val = PCS.eval_at(self.coms[com], point)
+        self.tape.append(("val", np.asarray(val)))
+        return val
+
+    # -- materialization (field vectors for sum-check factors) --------------
+    def materialize(self, v: View) -> jnp.ndarray:
+        if isinstance(v, Slice):
+            flat = self.ints[v.com][v.offset:v.offset + (1 << v.log_n)]
+            return F.f_from_int(flat)
+        if isinstance(v, Affine):
+            n = 1 << view_log_n(v)
+            acc = jnp.broadcast_to(F.fconst(v.const), (n,))
+            for c, sub in v.terms:
+                acc = F.fadd(acc, F.fmul(F.fconst(c, (n,)),
+                                         self.materialize(sub)))
+            return acc
+        if isinstance(v, BcastCols):
+            base = self.materialize(v.base)
+            return jnp.repeat(base, 1 << v.extra)
+        if isinstance(v, BcastRows):
+            base = self.materialize(v.base)
+            return jnp.tile(base, 1 << v.extra)
+        if isinstance(v, Concat):
+            return jnp.concatenate([self.materialize(p) for p in v.parts])
+        if isinstance(v, Public):
+            return F.f_from_int(np.array(v.values, dtype=np.int64))
+        raise TypeError(v)
+
+    def put(self, obj):
+        self.tape.append(("obj", obj))
+
+    def put_value(self, val: jnp.ndarray) -> jnp.ndarray:
+        self.tape.append(("val", np.asarray(val)))
+        self.tr.absorb(val)
+        return val
+
+    def finalize(self) -> List:
+        """Batch-open every commitment at its accumulated claim points."""
+        for name in self.claims:
+            points = [jnp.asarray(p) for p, _ in self.claims[name]]
+            bundle = PCS.prove_openings(self.coms[name], points, self.tr,
+                                        self.params)
+            self.tape.append(("open", name, bundle))
+        return self.tape
+
+
+class VerifierCtx(_Ctx):
+    is_prover = False
+
+    def __init__(self, transcript, params, tape: List):
+        super().__init__(transcript, params)
+        self.tape = tape
+        self.cursor = 0
+
+    def _next(self, kind: str):
+        if self.cursor >= len(self.tape):
+            raise ProofError("proof tape exhausted")
+        item = self.tape[self.cursor]
+        self.cursor += 1
+        if item[0] != kind:
+            raise ProofError(f"tape mismatch: want {kind}, got {item[0]}")
+        return item
+
+    def commit(self, name: str, n_elems: int):
+        _, got_name, root = self._next("root")
+        if got_name != name:
+            raise ProofError(f"commitment order mismatch: {got_name}!={name}")
+        total = 1 << max((n_elems - 1).bit_length(), 0) if n_elems > 1 else 1
+        self.roots[name] = root
+        self.shapes[name] = PCS.shape_for(total)
+        self.tr.absorb(jnp.asarray(root))
+
+    def attach(self, name: str, root: np.ndarray, n_elems: int):
+        total = 1 << max((n_elems - 1).bit_length(), 0) if n_elems > 1 else 1
+        self.roots[name] = root
+        self.shapes[name] = PCS.shape_for(total)
+        self.tr.absorb(jnp.asarray(root))
+
+    def _leaf_claim_impl(self, com: str, point: jnp.ndarray) -> jnp.ndarray:
+        _, val = self._next("val")
+        return jnp.asarray(val)
+
+    def get(self):
+        _, obj = self._next("obj")
+        return obj
+
+    def get_value(self) -> jnp.ndarray:
+        _, val = self._next("val")
+        v = jnp.asarray(val)
+        self.tr.absorb(v)
+        return v
+
+    def finalize(self):
+        for name in self.claims:
+            _, got_name, bundle = self._next("open")
+            if got_name != name:
+                raise ProofError(f"opening order mismatch: {got_name}")
+            points = [jnp.asarray(p) for p, _ in self.claims[name]]
+            values = [jnp.asarray(v) for _, v in self.claims[name]]
+            ok = PCS.verify_openings(self.roots[name], *self.shapes[name],
+                                     points, values, bundle, self.tr,
+                                     self.params)
+            if not ok:
+                raise ProofError(f"PCS opening failed for {name}")
+        if self.cursor != len(self.tape):
+            raise ProofError("unconsumed proof material")
+
+
+Ctx = Union[ProverCtx, VerifierCtx]
+
+
+# ---------------------------------------------------------------------------
+# Gadgets. Each runs identically on both sides; prover writes tape values.
+# ---------------------------------------------------------------------------
+def g_sum(ctx: Ctx, v: View) -> jnp.ndarray:
+    """Returns S with proof that S = sum_z v(z)."""
+    if ctx.is_prover:
+        vec = F.f4_from_base(ctx.materialize(v))
+        s = ctx.put_value(fsum(vec, axis=0))
+        proof, rho = SC.prove([vec], ctx.tr)
+        ctx.put(proof)
+        finals = jnp.asarray(proof.final_evals)
+    else:
+        s = ctx.get_value()
+        proof = ctx.get()
+        ok, rho, finals = SC.verify(s, proof, 1, ctx.tr)
+        if not ok:
+            raise ProofError("g_sum sumcheck failed")
+    ctx.check_eq(ctx.claim(v, rho), finals[0], "g_sum final eval")
+    return s
+
+
+def g_dot_eq(ctx: Ctx, views: Sequence[View], r: jnp.ndarray,
+             total_bits: Optional[int] = None, eq_pos: str = "lead"
+             ) -> jnp.ndarray:
+    """Returns T with proof that T = sum_z EQ(z) * prod_i v_i(z).
+
+    EQ covers len(r) of the index bits: leading bits ('lead', EQ broadcasts
+    over trailing/column bits — a per-row reduction) or trailing bits
+    ('trail', per-column reduction). With total_bits == len(r) this is the
+    plain eq-weighted zerocheck kernel.
+    """
+    nr = r.shape[0]
+    total_bits = nr if total_bits is None else total_bits
+    extra = total_bits - nr
+    if ctx.is_prover:
+        eq = eq_points(r)
+        if extra:
+            if eq_pos == "lead":
+                eq = jnp.repeat(eq, 1 << extra, axis=0)
+            else:
+                eq = jnp.tile(eq, (1 << extra, 1))
+        mats = [F.f4_from_base(ctx.materialize(v)) for v in views]
+        prod = eq
+        for m in mats:
+            prod = F.f4mul(prod, m)
+        t = ctx.put_value(fsum(prod, axis=0))
+        proof, rho = SC.prove([eq] + mats, ctx.tr)
+        ctx.put(proof)
+        finals = jnp.asarray(proof.final_evals)
+    else:
+        t = ctx.get_value()
+        proof = ctx.get()
+        ok, rho, finals = SC.verify(t, proof, 1 + len(views), ctx.tr)
+        if not ok:
+            raise ProofError("g_dot_eq sumcheck failed")
+    rho_eq = rho[:nr] if eq_pos == "lead" else rho[extra:]
+    ctx.check_eq(eq_eval(r, rho_eq), finals[0], "g_dot_eq eq factor")
+    for i, v in enumerate(views):
+        ctx.check_eq(ctx.claim(v, rho), finals[i + 1],
+                     f"g_dot_eq factor {i}")
+    return t
+
+
+def g_matmul_term(ctx: Ctx, A: View, B: View, shape: Tuple[int, int, int],
+                  r_i: jnp.ndarray, r_j: jnp.ndarray,
+                  a_t: bool = False, b_t: bool = False) -> jnp.ndarray:
+    """Returns (op(A)@op(B))~(r_i, r_j) with a Thaler sum-check over k.
+
+    a_t/b_t: the view stores the TRANSPOSE of the operand (its natural
+    witness layout); claims swap the point halves accordingly — transposes
+    are free in MLE land.
+    """
+    n, k, m = shape
+    ln, lk, lm = (x.bit_length() - 1 for x in (n, k, m))
+    assert (1 << ln, 1 << lk, 1 << lm) == (n, k, m)
+    if ctx.is_prover:
+        Am = ctx.materialize(A).reshape((k, n) if a_t else (n, k))
+        Bm = ctx.materialize(B).reshape((m, k) if b_t else (k, m))
+        A_r = partial_eval_cols(Am, r_i) if a_t else partial_eval_rows(Am, r_i)
+        B_c = partial_eval_rows(Bm, r_j) if b_t else partial_eval_cols(Bm, r_j)
+        t = ctx.put_value(fsum(F.f4mul(A_r, B_c), axis=0))
+        proof, rho = SC.prove([A_r, B_c], ctx.tr)
+        ctx.put(proof)
+        finals = jnp.asarray(proof.final_evals)
+    else:
+        t = ctx.get_value()
+        proof = ctx.get()
+        ok, rho, finals = SC.verify(t, proof, 2, ctx.tr)
+        if not ok:
+            raise ProofError("g_matmul_term sumcheck failed")
+        if rho.shape[0] != lk:
+            raise ProofError("g_matmul_term wrong k vars")
+    a_pt = jnp.concatenate([rho, r_i]) if a_t else jnp.concatenate([r_i, rho])
+    b_pt = jnp.concatenate([r_j, rho]) if b_t else jnp.concatenate([rho, r_j])
+    ctx.check_eq(ctx.claim(A, a_pt), finals[0], "matmul A eval")
+    ctx.check_eq(ctx.claim(B, b_pt), finals[1], "matmul B eval")
+    return t
+
+
+def g_rowsum(ctx: Ctx, X: View, shape: Tuple[int, int],
+             r_i: jnp.ndarray) -> jnp.ndarray:
+    """Returns sum_k X~(r_i, k) (row-sum vector's MLE at r_i)."""
+    n, k = shape
+    if ctx.is_prover:
+        Xm = ctx.materialize(X).reshape(n, k)
+        X_r = partial_eval_rows(Xm, r_i)
+        t = ctx.put_value(fsum(X_r, axis=0))
+        proof, rho = SC.prove([X_r], ctx.tr)
+        ctx.put(proof)
+        finals = jnp.asarray(proof.final_evals)
+    else:
+        t = ctx.get_value()
+        proof = ctx.get()
+        ok, rho, finals = SC.verify(t, proof, 1, ctx.tr)
+        if not ok:
+            raise ProofError("g_rowsum sumcheck failed")
+    ctx.check_eq(ctx.claim(X, jnp.concatenate([r_i, rho])), finals[0],
+                 "rowsum eval")
+    return t
+
+
+def g_colsum(ctx: Ctx, X: View, shape: Tuple[int, int],
+             r_j: jnp.ndarray) -> jnp.ndarray:
+    n, k = shape
+    if ctx.is_prover:
+        Xm = ctx.materialize(X).reshape(n, k)
+        X_c = partial_eval_cols(Xm, r_j)
+        t = ctx.put_value(fsum(X_c, axis=0))
+        proof, rho = SC.prove([X_c], ctx.tr)
+        ctx.put(proof)
+        finals = jnp.asarray(proof.final_evals)
+    else:
+        t = ctx.get_value()
+        proof = ctx.get()
+        ok, rho, finals = SC.verify(t, proof, 1, ctx.tr)
+        if not ok:
+            raise ProofError("g_colsum sumcheck failed")
+    ctx.check_eq(ctx.claim(X, jnp.concatenate([rho, r_j])), finals[0],
+                 "colsum eval")
+    return t
+
+
+def _fc(c: int) -> jnp.ndarray:
+    return F.f4_from_base(F.fconst(c))
+
+
+def f4_lincomb(pairs, const: int = 0) -> jnp.ndarray:
+    """sum_i c_i * val_i + const over Fp4 (c_i python ints)."""
+    acc = _fc(const)
+    for c, val in pairs:
+        acc = F.f4add(acc, F.f4mul(_fc(c), jnp.asarray(val)))
+    return acc
+
+
+def g_lin_relation(ctx: Ctx, views_coefs, const: int, what: str,
+                   r: Optional[jnp.ndarray] = None, log_n: Optional[int] = None):
+    """Check sum_i c_i * v_i + const == 0 entrywise, via a random point."""
+    if r is None:
+        r = ctx.challenge_point(log_n)
+    acc = _fc(const)
+    for c, v in views_coefs:
+        acc = F.f4add(acc, F.f4mul(_fc(c % F.P), ctx.claim(v, r)))
+    ctx.check_eq(acc, F.f4zero(()), what)
+    return r
+
+
+def g_hadamard(ctx: Ctx, a: View, b: View, c: View, what: str = "hadamard"):
+    """Check c = a * b entrywise (no rounding)."""
+    log_n = view_log_n(a)
+    r = ctx.challenge_point(log_n)
+    t = g_dot_eq(ctx, [a, b], r)
+    ctx.check_eq(ctx.claim(c, r), t, what)
+
+
+def g_abs(ctx: Ctx, z: View, a: View, what: str = "abs"):
+    """Check a = |z| given a is separately range-bounded >= 0: a^2 == z^2."""
+    log_n = view_log_n(z)
+    r = ctx.challenge_point(log_n)
+    t_a = g_dot_eq(ctx, [a, a], r)
+    t_z = g_dot_eq(ctx, [z, z], r)
+    ctx.check_eq(t_a, t_z, what)
+
+
+def g_int_matmul(ctx: Ctx, A_hi: View, A_lo: View, B_hi: View, B_lo: View,
+                 shape: Tuple[int, int, int],
+                 a_t: bool = False, b_t: bool = False
+                 ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Accumulator MLE for C = A @ B with A = 256*(A_hi-128)+(A_lo-128)+128.
+
+    A_hi/A_lo etc. are the RAW [0,256) limb slices; centering by 128 keeps
+    every limb product in [-2^14, 2^14], so accumulators stay < p/2 for
+    k <= 61439 (asserted). a_t/b_t: views hold the operand transposed.
+    Returns (acc~(r_i,r_j), r_i, r_j); the caller feeds the value into a
+    rescale relation at point (r_i ++ r_j).
+    """
+    n, k, m = shape
+    # |limb product| <= 128^2, so |sum_k| <= 16384*k must stay < p/2.
+    assert 16384 * k < F.P // 2, "k exceeds limb-accumulator bound"
+    ln, lm = n.bit_length() - 1, m.bit_length() - 1
+    r_i = ctx.challenge_point(ln)
+    r_j = ctx.challenge_point(lm)
+    Ah = vaff([(1, A_hi)], const=-128)   # centered limbs in [-128, 128)
+    Al = vaff([(1, A_lo)], const=-128)
+    Bh = vaff([(1, B_hi)], const=-128)
+    Bl = vaff([(1, B_lo)], const=-128)
+    t_hh = g_matmul_term(ctx, Ah, Bh, shape, r_i, r_j, a_t, b_t)
+    t_hl = g_matmul_term(ctx, Ah, Bl, shape, r_i, r_j, a_t, b_t)
+    t_lh = g_matmul_term(ctx, Al, Bh, shape, r_i, r_j, a_t, b_t)
+    t_ll = g_matmul_term(ctx, Al, Bl, shape, r_i, r_j, a_t, b_t)
+    if a_t:   # row sums of A = column sums of the stored A^T
+        rs_h = g_colsum(ctx, Ah, (k, n), r_i)
+        rs_l = g_colsum(ctx, Al, (k, n), r_i)
+    else:
+        rs_h = g_rowsum(ctx, Ah, (n, k), r_i)
+        rs_l = g_rowsum(ctx, Al, (n, k), r_i)
+    if b_t:   # column sums of B = row sums of the stored B^T
+        cs_h = g_rowsum(ctx, Bh, (m, k), r_j)
+        cs_l = g_rowsum(ctx, Bl, (m, k), r_j)
+    else:
+        cs_h = g_colsum(ctx, Bh, (k, m), r_j)
+        cs_l = g_colsum(ctx, Bl, (k, m), r_j)
+    # A = 256 Ah' + Al' + 128 (Ah' = A_hi-128, Al' = A_lo-128), same for B:
+    # C = 256^2 HH + 256 HL + 256 LH + LL
+    #     + 128*256 rowsum(Ah') + 128 rowsum(Al')
+    #     + 128*256 colsum(Bh') + 128 colsum(Bl') + 128^2 k.
+    acc = f4_lincomb([
+        (256 * 256, t_hh), (256, t_hl), (256, t_lh), (1, t_ll),
+        (128 * 256, rs_h), (128, rs_l),
+        (128 * 256, cs_h), (128, cs_l),
+    ], const=(128 * 128 * k) % F.P)
+    return acc, r_i, r_j
+
+
+def g_rescale(ctx: Ctx, acc_val: jnp.ndarray, r: jnp.ndarray,
+              out: View, err: View, shift: int, out_bits: int,
+              what: str = "rescale"):
+    """Check acc + 2^(shift-1) = 2^shift * out + err at the point r.
+
+    `err` must be an Affine view over range-checked slices covering
+    [0, 2^shift); `out` a view over range-checked slices of out_bits width.
+    Soundness needs 2^shift * 2^out_bits + 2^shift < p/2 (asserted).
+    """
+    assert (1 << (shift + out_bits)) + (1 << shift) < F.P // 2, \
+        f"rescale bound {shift}+{out_bits}"
+    rc = 1 << (shift - 1)
+    lhs = F.f4add(jnp.asarray(acc_val), _fc(rc))
+    rhs = f4_lincomb([(1 << shift, ctx.claim(out, r)),
+                      (1, ctx.claim(err, r))])
+    ctx.check_eq(lhs, rhs, what)
+
+
+def g_range8(ctx: Ctx, com_name: str, n_elems: int):
+    """Value-mode LogUp: every entry of commitment `com_name` in [0,256)."""
+    total = 1 << max((n_elems - 1).bit_length(), 0) if n_elems > 1 else 1
+    if ctx.is_prover:
+        ints = ctx.ints[com_name]
+        assert ints.min() >= 0 and ints.max() < 256, \
+            f"{com_name} has out-of-range entries"
+        pf = LK.prove(ints, None, None, 8, ctx.tr, ctx.params)
+        ctx.put(pf)
+        w_point, idx_claim = jnp.asarray(pf.w_point), jnp.asarray(pf.idx_claim)
+    else:
+        pf = ctx.get()
+        ok, w_point, idx_claim, _ = LK.verify(pf, total, None, 8, ctx.tr,
+                                              ctx.params)
+        if not ok:
+            raise ProofError(f"range8 lookup failed for {com_name}")
+        w_point, idx_claim = jnp.asarray(w_point), jnp.asarray(idx_claim)
+    log_total = sum(ctx.shapes[com_name])
+    full = Slice(com_name, 0, log_total)
+    ctx.check_eq(ctx.claim(full, w_point), idx_claim,
+                 f"range8 claim for {com_name}")
+
+
+# ---------------------------------------------------------------------------
+# Witness builder: packs named 8-bit arrays into one commitment's slices.
+# ---------------------------------------------------------------------------
+class WitnessBuilder:
+    """Allocates 8-bit witness slices for one commitment.
+
+    All slices are range-checked in [0, 256) by a single g_range8 instance
+    on the finished commitment. Wider integers are represented as digit
+    compositions (`alloc_ranged`), 16-bit signed values as (hi, lo) limb
+    pairs (`alloc_limbs`); both return Affine views that reconstruct the
+    value by linearity.
+    """
+
+    def __init__(self, com_name: str):
+        self.com_name = com_name
+        self.items: "OrderedDict[str, Tuple[int, Optional[np.ndarray]]]" = OrderedDict()
+        self.ties: List[Tuple[str, str, int, int]] = []  # (w, top, scale, log_n)
+
+    def alloc(self, name: str, n: int, values: Optional[np.ndarray] = None
+              ) -> str:
+        """Declare (and optionally fill) an 8-bit slice of n logical entries.
+
+        The verifier calls with values=None — the layout is a public function
+        of the layer config, so both sides build identical slice maps.
+        """
+        target = 1 << max((n - 1).bit_length(), 0) if n > 1 else 1
+        if values is not None:
+            values = np.asarray(values, dtype=np.int64).reshape(-1)
+            assert len(values) == n, f"slice {name}: {len(values)} != {n}"
+            if target != n:
+                values = np.concatenate(
+                    [values, np.zeros(target - n, np.int64)])
+            assert values.min() >= 0 and values.max() < 256, \
+                f"slice {name} not 8-bit: [{values.min()}, {values.max()}]"
+        assert name not in self.items, f"duplicate slice {name}"
+        self.items[name] = (target, values)
+        return name
+
+    def alloc_limbs(self, name: str, n: int,
+                    x: Optional[np.ndarray] = None) -> "LimbPair":
+        """Signed 16-bit array -> (hi, lo) slices; view = 256*hi+lo-32768."""
+        hi = lo = None
+        if x is not None:
+            x = np.asarray(x, dtype=np.int64).reshape(-1)
+            assert x.min() >= -(1 << 15) and x.max() < (1 << 15), \
+                f"{name} exceeds 16-bit: [{x.min()}, {x.max()}]"
+            hi = (x >> 8) + 128
+            lo = x & 255
+        self.alloc(name + ".hi", n, hi)
+        self.alloc(name + ".lo", n, lo)
+        return LimbPair(self.com_name, name)
+
+    def alloc_ranged(self, name: str, n: int, bits: int,
+                     values: Optional[np.ndarray] = None) -> "RangedValue":
+        """Unsigned values in [0, 2^bits) -> exact digit decomposition."""
+        if values is not None:
+            values = np.asarray(values, dtype=np.int64).reshape(-1)
+            assert values.min() >= 0 and values.max() < (1 << bits), \
+                f"{name} exceeds {bits} bits: max {values.max()}"
+        ndig = (bits + 7) // 8
+        rem = bits % 8
+        digit_names = []
+        for i in range(ndig):
+            d = (values >> (8 * i)) & 255 if values is not None else None
+            digit_names.append(self.alloc(f"{name}.d{i}", n, d))
+        if rem:
+            scale = 1 << (8 - rem)
+            w = None
+            if values is not None:
+                w = ((values >> (8 * (ndig - 1))) & 255) * scale
+            wname = self.alloc(f"{name}.w", n, w)
+            log_n = (n - 1).bit_length() if n > 1 else 0
+            self.ties.append((wname, digit_names[-1], scale, log_n))
+        return RangedValue(self.com_name, name, ndig)
+
+    def pack(self) -> Tuple[Dict[str, Slice], Optional[np.ndarray], int]:
+        """Pack slices (descending size). Returns (slices, values|None, n)."""
+        names = list(self.items)
+        order = sorted(names, key=lambda nm: -self.items[nm][0])
+        offset = 0
+        slices: Dict[str, Slice] = {}
+        for nm in order:
+            n, _ = self.items[nm]
+            log_n = (n - 1).bit_length() if n > 1 else 0
+            slices[nm] = Slice(self.com_name, offset, log_n)
+            offset += n
+        total = 1 << max((offset - 1).bit_length(), 0) if offset > 1 else 1
+        have_vals = all(v is not None for _, v in self.items.values())
+        packed = None
+        if have_vals:
+            packed = np.zeros(total, dtype=np.int64)
+            for nm in order:
+                n, vals = self.items[nm]
+                packed[slices[nm].offset:slices[nm].offset + n] = vals
+        self.slices = slices
+        return slices, packed, total
+
+    def build(self, ctx) -> Dict[str, Slice]:
+        """Pack, commit under this ctx, return the public slice map."""
+        slices, packed, total = self.pack()
+        if ctx.is_prover:
+            assert packed is not None, "prover missing witness values"
+            ctx.commit(self.com_name, packed)
+        else:
+            ctx.commit(self.com_name, total)
+        return slices
+
+    def run_checks(self, ctx, slices: Dict[str, Slice]):
+        """Range-check the whole commitment + digit-tie relations."""
+        n_elems = 1 << sum(ctx.shapes[self.com_name])
+        g_range8(ctx, self.com_name, n_elems)
+        for wname, topname, scale, _ in self.ties:
+            w_sl, top_sl = slices[wname], slices[topname]
+            g_lin_relation(ctx, [(1, w_sl), (-scale, top_sl)], 0,
+                           f"digit tie {wname}", log_n=w_sl.log_n)
+
+
+@dataclasses.dataclass(frozen=True)
+class LimbPair:
+    com: str
+    name: str
+
+    def view(self, slices: Dict[str, Slice]) -> Affine:
+        return vaff([(256, slices[self.name + ".hi"]),
+                     (1, slices[self.name + ".lo"])], const=-32768)
+
+    def hi(self, slices):
+        return slices[self.name + ".hi"]
+
+    def lo(self, slices):
+        return slices[self.name + ".lo"]
+
+
+@dataclasses.dataclass(frozen=True)
+class RangedValue:
+    com: str
+    name: str
+    ndig: int
+
+    def view(self, slices: Dict[str, Slice]) -> Affine:
+        return vaff([(1 << (8 * i), slices[f"{self.name}.d{i}"])
+                     for i in range(self.ndig)])
+
+
+def g_lut(ctx: Ctx, table_name: str, idx: View, out: View,
+          idx_ints: Optional[np.ndarray], out_ints: Optional[np.ndarray],
+          n_elems: int, what: str = "lut"):
+    """Pair-mode LogUp: (idx_i, out_i) in {(j, T[j])} for a standard LUT.
+
+    idx/out views must cover n_elems padded to 2^m with valid pairs —
+    callers pad idx with 0 and out with T[0].
+    """
+    table = LUTS.table_q(table_name).astype(np.int64)
+    total = 1 << max((n_elems - 1).bit_length(), 0) if n_elems > 1 else 1
+    if ctx.is_prover:
+        pf = LK.prove(idx_ints, out_ints, table, LUTS.LUT_BITS, ctx.tr,
+                      ctx.params)
+        ctx.put(pf)
+        w_point = jnp.asarray(pf.w_point)
+        idx_claim = jnp.asarray(pf.idx_claim)
+        out_claim = jnp.asarray(pf.out_claim)
+    else:
+        pf = ctx.get()
+        ok, w_point, idx_claim, out_claim = LK.verify(
+            pf, total, table, LUTS.LUT_BITS, ctx.tr, ctx.params)
+        if not ok:
+            raise ProofError(f"lut lookup failed: {what}")
+        w_point = jnp.asarray(w_point)
+        idx_claim = jnp.asarray(idx_claim)
+        out_claim = jnp.asarray(out_claim)
+    ctx.check_eq(ctx.claim(idx, w_point), idx_claim, f"{what} idx claim")
+    ctx.check_eq(ctx.claim(out, w_point), out_claim, f"{what} out claim")

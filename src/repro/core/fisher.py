@@ -1,0 +1,108 @@
+"""Fisher information-guided verification prioritization (paper §5).
+
+Layer importance I_l = tr(F_l)/|theta_l| with F_l the Fisher information
+of layer l's parameters, estimated empirically:
+
+    tr(F_l) = E_{x, y~p(.|x)} || grad_{theta_l} log p(y|x) ||^2
+
+We sample y from the model's own distribution (true Fisher, not empirical
+Fisher with data labels) and average the squared per-layer gradient norms
+over a batch. Selection strategies reproduce Table 2 / Table 7:
+fisher (top-k by I_l), random (uniform k-subset), uniform (every other).
+
+Security caveat (paper §5.2) applies verbatim: this is budget allocation
+against economically-motivated adversaries, not a cryptographic guarantee
+— combine with random auditing (`fisher_plus_random`).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, List, Sequence
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass
+class FisherScores:
+    per_layer_trace: np.ndarray      # tr(F_l) estimates
+    per_layer_params: np.ndarray     # |theta_l|
+    importance: np.ndarray           # I_l = trace / params
+
+    @property
+    def total_mass(self) -> float:
+        return float(self.importance.sum())
+
+
+def estimate(loss_per_layer_grads: Callable, params_tree: Sequence,
+             batch_inputs: jnp.ndarray, rng: jax.Array,
+             n_samples: int = 4) -> FisherScores:
+    """Generic estimator: caller supplies a function returning per-layer
+    gradients of log p(y|x) for sampled y. See models/model.py for the
+    model-bound wrapper used by benchmarks."""
+    raise NotImplementedError("use fisher_from_logprob_fn")
+
+
+def fisher_from_logprob_fn(logprob_fn: Callable, layer_params: List,
+                           inputs, rng: jax.Array, n_samples: int = 2
+                           ) -> FisherScores:
+    """tr(F_l) via sampled-label squared gradient norms.
+
+    logprob_fn(layer_params, inputs, rng_sample) must return the mean
+    log-likelihood of labels sampled from the model's own predictive
+    distribution (stop-gradient through the sampling).
+    """
+    n_layers = len(layer_params)
+    traces = np.zeros(n_layers)
+    sizes = np.array([sum(np.size(x) for x in jax.tree_util.tree_leaves(p))
+                      for p in layer_params], dtype=np.float64)
+    grad_fn = jax.grad(logprob_fn)
+    for s in range(n_samples):
+        rng, sub = jax.random.split(rng)
+        g = grad_fn(layer_params, inputs, sub)
+        for l in range(n_layers):
+            sq = sum(float(jnp.sum(x.astype(jnp.float32) ** 2))
+                     for x in jax.tree_util.tree_leaves(g[l]))
+            traces[l] += sq / n_samples
+    return FisherScores(per_layer_trace=traces, per_layer_params=sizes,
+                        importance=traces / np.maximum(sizes, 1.0))
+
+
+# ---------------------------------------------------------------------------
+# Selection strategies (Table 2 / Table 7).
+# ---------------------------------------------------------------------------
+def select_fisher(scores: FisherScores, k: int) -> List[int]:
+    order = np.argsort(-scores.importance)
+    return sorted(int(i) for i in order[:k])
+
+
+def select_random(n_layers: int, k: int, seed: int) -> List[int]:
+    rng = np.random.default_rng(seed)
+    return sorted(int(i) for i in
+                  rng.choice(n_layers, size=k, replace=False))
+
+
+def select_uniform(n_layers: int, k: int) -> List[int]:
+    idx = np.linspace(0, n_layers - 1, k)
+    return sorted(set(int(round(i)) for i in idx))
+
+
+def fisher_plus_random(scores: FisherScores, k_fisher: int, k_random: int,
+                       seed: int) -> List[int]:
+    """Paper's suggested defense: deterministic top-k + random audit."""
+    top = set(select_fisher(scores, k_fisher))
+    rest = [i for i in range(len(scores.importance)) if i not in top]
+    rng = np.random.default_rng(seed)
+    audit = rng.choice(len(rest), size=min(k_random, len(rest)),
+                       replace=False)
+    return sorted(top | {rest[int(i)] for i in audit})
+
+
+def importance_coverage(scores: FisherScores, subset: Sequence[int]) -> float:
+    """Fraction of total Fisher mass captured by the verified layers
+    (the metric of Tables 2 and 7)."""
+    tot = scores.importance.sum()
+    if tot <= 0:
+        return 0.0
+    return float(scores.importance[list(subset)].sum() / tot)

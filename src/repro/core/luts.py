@@ -1,0 +1,156 @@
+"""2^16-entry lookup tables for non-arithmetic ops (paper §4 / Appendix B).
+
+Each op has a LUTSpec over its published operating range: exp on [-4, 4],
+GELU and SiLU on [-8, 8], rsqrt on [0.01, 10] (table domain [0, 16) with
+in-table clamping). Ranges are powers of two wide, so the 16-bit input grid
+step is exactly 2^-f_in and the index map is a shift — cheap in the circuit.
+
+Two views of the same table:
+* float path (deployed model): ``apply(spec, x)`` -> float32, used by the
+  LUT-approximated models for the Table 1 / Table 5 accuracy experiments.
+* integer path (circuit): ``(i, out_code[i])`` pairs with out_code =
+  round(f(grid_i) * 2^f_out); LogUp (lookup.py) proves witness membership.
+
+Out-of-range handling follows Appendix B: inputs clamp to the table ends;
+GELU/SiLU asymptotics (y = x above, y = 0 below) are exact at the clamp
+points to within the output grid, so clamping realizes them.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Callable
+
+import numpy as np
+import jax.numpy as jnp
+
+LUT_BITS = 16
+LUT_SIZE = 1 << LUT_BITS
+
+
+@dataclasses.dataclass(frozen=True)
+class LUTSpec:
+    name: str
+    lo: float                 # left end of table domain
+    f_in: int                 # input fractional bits (step = 2^-f_in)
+    f_out: int                # output fractional bits for the integer table
+    fn: Callable              # exact numpy function
+    clamp_lo: float = None    # optional in-domain clamp (rsqrt)
+
+    @property
+    def hi(self) -> float:
+        return self.lo + LUT_SIZE * 2.0 ** (-self.f_in)
+
+
+def _rsqrt(x):
+    return 1.0 / np.sqrt(x)
+
+
+# Published operating ranges (paper Table 1 / Appendix B).
+# exp f_out=6 keeps the division-free softmax relation P*S + v = 2^8 e
+# inside BabyBear (DESIGN.md §2); the float path is unaffected.
+EXP = LUTSpec("exp", lo=-4.0, f_in=13, f_out=6, fn=np.exp)
+GELU = LUTSpec("gelu", lo=-8.0, f_in=12, f_out=8,
+               fn=lambda x: 0.5 * x * (1.0 + _erf(x / np.sqrt(2.0))))
+SILU = LUTSpec("silu", lo=-8.0, f_in=12, f_out=8,
+               fn=lambda x: x / (1.0 + np.exp(-x)))
+RSQRT = LUTSpec("rsqrt", lo=0.0, f_in=12, f_out=11, fn=_rsqrt, clamp_lo=0.01)
+# sigmoid and softplus power the SSM/xLSTM gates (DESIGN.md §4).
+SIGMOID = LUTSpec("sigmoid", lo=-8.0, f_in=12, f_out=14,
+                  fn=lambda x: 1.0 / (1.0 + np.exp(-x)))
+SOFTPLUS = LUTSpec("softplus", lo=-8.0, f_in=12, f_out=10,
+                   fn=lambda x: np.log1p(np.exp(x)))
+
+ALL_SPECS = {s.name: s for s in (EXP, GELU, SILU, RSQRT, SIGMOID, SOFTPLUS)}
+
+
+def _erf(x):
+    try:
+        from scipy.special import erf as _e  # pragma: no cover
+        return _e(x)
+    except Exception:
+        # Abramowitz-Stegun 7.1.26 is not exact enough for an oracle; use
+        # the complementary relation via np.vectorize(math.erf) instead.
+        import math
+        return np.vectorize(math.erf)(np.asarray(x, dtype=np.float64))
+
+
+@functools.lru_cache(maxsize=None)
+def grid(name: str) -> np.ndarray:
+    """Input grid x_i = lo + i * 2^-f_in, float64, length 2^16."""
+    spec = ALL_SPECS[name]
+    return spec.lo + np.arange(LUT_SIZE, dtype=np.float64) * 2.0 ** (-spec.f_in)
+
+
+@functools.lru_cache(maxsize=None)
+def table_f32(name: str) -> np.ndarray:
+    """Float32 output table (deployed-model path)."""
+    spec = ALL_SPECS[name]
+    x = grid(name)
+    if spec.clamp_lo is not None:
+        x = np.maximum(x, spec.clamp_lo)
+    return spec.fn(x).astype(np.float32)
+
+
+@functools.lru_cache(maxsize=None)
+def table_q(name: str) -> np.ndarray:
+    """Integer output table: round(f(grid) * 2^f_out), int32 (circuit path)."""
+    spec = ALL_SPECS[name]
+    x = grid(name)
+    if spec.clamp_lo is not None:
+        x = np.maximum(x, spec.clamp_lo)
+    return np.round(spec.fn(x) * (1 << spec.f_out)).astype(np.int64).astype(np.int32)
+
+
+def index_of(name: str, x: jnp.ndarray) -> jnp.ndarray:
+    """Float input -> clamped table index in [0, 2^16)."""
+    spec = ALL_SPECS[name]
+    i = jnp.round((x - spec.lo) * (1 << spec.f_in))
+    return jnp.clip(i, 0, LUT_SIZE - 1).astype(jnp.int32)
+
+
+def index_of_q(name: str, q: jnp.ndarray, f_q: int) -> jnp.ndarray:
+    """Fixed-point input code (f_q fractional bits) -> table index.
+
+    index = clamp(round(q * 2^{f_in - f_q}) - lo * 2^{f_in}). For f_q <= f_in
+    the rescale is an exact shift; for f_q > f_in it is round-to-nearest.
+    """
+    spec = ALL_SPECS[name]
+    lo_code = int(round(spec.lo * (1 << spec.f_in)))
+    if f_q <= spec.f_in:
+        scaled = q.astype(jnp.int64) << (spec.f_in - f_q)
+    else:
+        s = f_q - spec.f_in
+        scaled = (q.astype(jnp.int64) + (1 << (s - 1))) >> s
+    return jnp.clip(scaled - lo_code, 0, LUT_SIZE - 1).astype(jnp.int32)
+
+
+def apply(name: str, x: jnp.ndarray) -> jnp.ndarray:
+    """LUT-approximated op, float path (nearest-entry lookup, no interp)."""
+    t = jnp.asarray(table_f32(name))
+    return t[index_of(name, x)]
+
+
+def apply_q(name: str, q: jnp.ndarray, f_q: int) -> jnp.ndarray:
+    """Integer-code path: input code -> output code at f_out bits."""
+    t = jnp.asarray(table_q(name))
+    return t[index_of_q(name, q, f_q)]
+
+
+def measured_errors(name: str, n_samples: int = 200_001):
+    """Max-abs and mean-relative error of the float LUT over its range.
+
+    Reproduces the paper's Table 1 methodology: dense sampling of the
+    operating range, nearest-entry lookup vs. the exact function.
+    """
+    spec = ALL_SPECS[name]
+    lo = spec.clamp_lo if spec.clamp_lo is not None else spec.lo
+    hi = spec.hi if spec.name != "rsqrt" else 10.0
+    xs = np.linspace(lo, hi, n_samples)
+    exact = spec.fn(xs)
+    approx = np.asarray(apply(name, jnp.asarray(xs, dtype=jnp.float32)),
+                        dtype=np.float64)
+    abs_err = np.abs(approx - exact)
+    denom = np.maximum(np.abs(exact), 1e-12)
+    rel = abs_err / denom
+    return float(abs_err.max()), float(rel.mean())

@@ -1,0 +1,101 @@
+"""Merkle trees over Poseidon2 digests (vector commitments for the PCS).
+
+Leaves are rows of field elements (Montgomery uint32). The tree is built
+level-by-level with the vectorized 2-to-1 compression, so committing is one
+batched sponge pass plus log2(n) batched compressions — entirely jnp.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List
+
+import numpy as np
+import jax.numpy as jnp
+
+from . import field as F
+from . import poseidon2 as P2
+
+
+@dataclasses.dataclass
+class MerkleTree:
+    levels: List[jnp.ndarray]  # levels[0]: (n, DIGEST) leaf digests ... root last
+
+    @property
+    def root(self) -> jnp.ndarray:
+        return self.levels[-1][0]
+
+    @property
+    def num_leaves(self) -> int:
+        return self.levels[0].shape[0]
+
+
+def commit(leaves: jnp.ndarray) -> MerkleTree:
+    """leaves: (n, leaf_len) field elements; n padded to a power of two."""
+    n = leaves.shape[0]
+    digests = P2.hash_elems(leaves)
+    n_pad = 1 << max((n - 1).bit_length(), 0) if n > 1 else 1
+    if n_pad != n:
+        digests = jnp.concatenate(
+            [digests, jnp.zeros((n_pad - n, P2.DIGEST), dtype=jnp.uint32)], axis=0)
+    levels = [digests]
+    while levels[-1].shape[0] > 1:
+        cur = levels[-1]
+        levels.append(P2.compress(cur[0::2], cur[1::2]))
+    return MerkleTree(levels=levels)
+
+
+@dataclasses.dataclass
+class MerklePath:
+    index: int
+    siblings: np.ndarray  # (depth, DIGEST) uint32 (Montgomery), host-side
+
+
+def open_path(tree: MerkleTree, index: int) -> MerklePath:
+    sibs = []
+    idx = index
+    for level in tree.levels[:-1]:
+        sibs.append(np.asarray(level[idx ^ 1]))
+        idx >>= 1
+    return MerklePath(index=index, siblings=np.stack(sibs) if sibs else
+                      np.zeros((0, P2.DIGEST), np.uint32))
+
+
+def verify_path(root: np.ndarray, leaf: jnp.ndarray, path: MerklePath) -> bool:
+    """Recompute root from a leaf row and its authentication path."""
+    node = P2.hash_elems(jnp.asarray(leaf))
+    idx = path.index
+    for sib in path.siblings:
+        sib = jnp.asarray(sib)
+        if idx & 1:
+            node = P2.compress(sib, node)
+        else:
+            node = P2.compress(node, sib)
+        idx >>= 1
+    return bool(np.array_equal(np.asarray(node), np.asarray(root)))
+
+
+def batch_open(tree: MerkleTree, indices) -> List[MerklePath]:
+    return [open_path(tree, int(i)) for i in indices]
+
+
+def verify_paths_batch(root: np.ndarray, leaves: jnp.ndarray,
+                       paths: List[MerklePath]) -> bool:
+    """Verify many authentication paths with one compress per level
+    (vectorized over queries — the verifier's hot loop)."""
+    t = len(paths)
+    if t == 0:
+        return True
+    depth = paths[0].siblings.shape[0]
+    if any(p.siblings.shape[0] != depth for p in paths):
+        return False
+    idx = np.array([p.index for p in paths], dtype=np.int64)
+    sibs = jnp.asarray(np.stack([p.siblings for p in paths]))  # (t, d, 8)
+    node = P2.hash_elems(jnp.asarray(leaves))                  # (t, 8)
+    for d in range(depth):
+        bit = jnp.asarray((idx >> d) & 1, dtype=jnp.uint32)[:, None]
+        sib = sibs[:, d]
+        left = jnp.where(bit.astype(bool), sib, node)
+        right = jnp.where(bit.astype(bool), node, sib)
+        node = P2.compress(left, right)
+    root_b = jnp.broadcast_to(jnp.asarray(root), node.shape)
+    return bool(np.array_equal(np.asarray(node), np.asarray(root_b)))

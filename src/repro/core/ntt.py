@@ -1,0 +1,105 @@
+"""Radix-2 NTT over BabyBear (2-adicity 27) for Reed-Solomon encoding.
+
+Operates on Montgomery-form uint32 arrays, batched over the leading axis:
+``ntt(x)`` transforms the trailing axis. Twiddles are precomputed per size and
+cached (Montgomery form). The per-stage butterfly is the compute hot spot and
+has a Pallas kernel (``repro.kernels.ntt_kernel``); this module is the jnp
+reference path used by default on CPU.
+"""
+from __future__ import annotations
+
+import functools
+
+import numpy as np
+import jax.numpy as jnp
+
+from . import field as F
+
+
+@functools.lru_cache(maxsize=None)
+def _root_of_unity(n: int) -> int:
+    assert n & (n - 1) == 0 and n <= 2**F.TWO_ADICITY
+    return pow(F.GENERATOR, (F.P - 1) // n, F.P)
+
+
+@functools.lru_cache(maxsize=None)
+def _twiddles(n: int, inverse: bool) -> np.ndarray:
+    """Full twiddle array w^0..w^(n/2-1) in Montgomery form."""
+    w = _root_of_unity(n)
+    if inverse:
+        w = pow(w, F.P - 2, F.P)
+    tw = np.empty(max(n // 2, 1), dtype=np.uint32)
+    acc = 1
+    for i in range(max(n // 2, 1)):
+        tw[i] = (acc * F._R) % F.P
+        acc = (acc * w) % F.P
+    return tw
+
+
+@functools.lru_cache(maxsize=None)
+def _bitrev(n: int) -> np.ndarray:
+    bits = n.bit_length() - 1
+    idx = np.arange(n)
+    rev = np.zeros(n, dtype=np.int64)
+    for b in range(bits):
+        rev |= ((idx >> b) & 1) << (bits - 1 - b)
+    return rev
+
+
+import jax
+
+
+@functools.partial(jax.jit, static_argnames=("inverse",))
+def _ntt_impl(x: jnp.ndarray, inverse: bool) -> jnp.ndarray:
+    n = x.shape[-1]
+    stages = n.bit_length() - 1
+    tw_full = _twiddles(n, inverse)
+    x = x[..., _bitrev(n)]
+    for s in range(stages):
+        half = 1 << s                      # butterfly half-width
+        stride = n // (2 * half)           # twiddle stride at this stage
+        xe = x.reshape(x.shape[:-1] + (n // (2 * half), 2, half))
+        lo, hi = xe[..., 0, :], xe[..., 1, :]
+        tw = jnp.asarray(tw_full[::stride][:half])
+        thi = F.fmul(hi, tw)
+        out_lo = F.fadd(lo, thi)
+        out_hi = F.fsub(lo, thi)
+        x = jnp.stack([out_lo, out_hi], axis=-2).reshape(x.shape[:-1] + (n,))
+    if inverse:
+        n_inv = F.fconst(pow(n, F.P - 2, F.P))
+        x = F.fmul(x, n_inv)
+    return x
+
+
+def ntt(x: jnp.ndarray, inverse: bool = False) -> jnp.ndarray:
+    """Iterative Cooley-Tukey NTT along the trailing axis (any leading dims).
+
+    Jitted per shape: the stage loop unrolls at trace time (dispatch-bound
+    otherwise — see EXPERIMENTS.md §Perf, prover iteration 1).
+    """
+    n = x.shape[-1]
+    if n == 1:
+        return x
+    assert n & (n - 1) == 0, "NTT size must be a power of two"
+    return _ntt_impl(x, inverse)
+
+
+def intt(x: jnp.ndarray) -> jnp.ndarray:
+    return ntt(x, inverse=True)
+
+
+def rs_encode(rows: jnp.ndarray, blowup: int) -> jnp.ndarray:
+    """Reed-Solomon encode each row (trailing axis) at rate 1/blowup.
+
+    Interprets each length-c row as coefficients? No: as *evaluations are the
+    message itself* in the systematic view we use the coefficient view:
+    rows are treated as polynomial coefficients (degree < c) and evaluated on
+    the size ``c*blowup`` subgroup. The first ``c`` symbols are NOT the
+    message; proximity checking in the PCS works on the codeword directly.
+    """
+    c = rows.shape[-1]
+    n = c * blowup
+    assert n & (n - 1) == 0
+    padded = jnp.concatenate(
+        [rows, jnp.zeros(rows.shape[:-1] + (n - c,), dtype=rows.dtype)], axis=-1)
+    return ntt(padded)

@@ -1,0 +1,209 @@
+"""Ligero/Brakedown-style multilinear polynomial commitment scheme.
+
+TPU adaptation of the paper's Halo2-IPA commitments (DESIGN.md §2): instead of
+elliptic-curve MSMs we commit to a vector v of length N = 2^m by
+
+  1. reshaping it into an R x C matrix (row-major, C = 2^ceil(m/2)),
+  2. Reed-Solomon encoding every row at rate 1/blowup (NTT),
+  3. Merkle-committing the C*blowup columns with Poseidon2.
+
+An evaluation of the multilinear extension V(r) factors through the matrix:
+V(r) = b^T M a with a = eq(r_cols), b = eq(r_rows). The prover reveals
+u = b^T M; by row-linearity of the code, Enc(u) must agree with b^T Enc(M)
+at every column, which the verifier spot-checks on `queries` random columns
+(opened against the Merkle root). A dedicated random-combination proximity
+row is included to enforce that all rows are close to codewords.
+
+Soundness knobs: `security_bits(params)` reports the query-phase error
+(1+rho)/2 per query — the standard Ligero distance bound — plus the field
+soundness of the batching. All arithmetic is uint32 Montgomery (field.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import List, Sequence, Tuple
+
+import numpy as np
+import jax.numpy as jnp
+
+from . import field as F
+from . import merkle as M
+from . import ntt as N
+from .mle import eq_points, fsum, partial_eval_rows
+from .transcript import Transcript
+
+
+@dataclasses.dataclass(frozen=True)
+class PCSParams:
+    blowup: int = 4
+    queries: int = 64
+
+    def security_bits(self) -> float:
+        rho = 1.0 / self.blowup
+        per_query = (1.0 + rho) / 2.0
+        return -self.queries * math.log2(per_query)
+
+
+@dataclasses.dataclass
+class Commitment:
+    mat: jnp.ndarray        # (R, C) base-field message rows
+    enc: jnp.ndarray        # (R, C*blowup) encoded rows
+    tree: M.MerkleTree      # over columns of enc
+    log_r: int
+    log_c: int
+
+    @property
+    def root(self) -> np.ndarray:
+        return np.asarray(self.tree.root)
+
+
+@dataclasses.dataclass
+class OpeningBundle:
+    us: np.ndarray          # (k, C, 4) — one u per opened point
+    u_prox: np.ndarray      # (C, 4) — proximity row rho^T M
+    columns: np.ndarray     # (t, R) — opened encoded columns
+    paths: List[M.MerklePath]
+
+
+def shape_for(n_elems: int) -> Tuple[int, int]:
+    m = max((n_elems - 1).bit_length(), 0) if n_elems > 1 else 0
+    log_c = (m + 1) // 2
+    log_r = m - log_c
+    return log_r, log_c
+
+
+def commit(vec: jnp.ndarray, params: PCSParams) -> Commitment:
+    """vec: flat base-field (Montgomery uint32) array; zero-padded to 2^m."""
+    n = vec.shape[0]
+    log_r, log_c = shape_for(n)
+    total = 1 << (log_r + log_c)
+    if total != n:
+        vec = jnp.concatenate([vec, jnp.zeros((total - n,), jnp.uint32)])
+    mat = vec.reshape(1 << log_r, 1 << log_c)
+    enc = N.rs_encode(mat, params.blowup)
+    tree = M.commit(enc.T)                      # leaves are columns
+    return Commitment(mat=mat, enc=enc, tree=tree, log_r=log_r, log_c=log_c)
+
+
+def eval_at(com: Commitment, point: jnp.ndarray) -> jnp.ndarray:
+    """Prover-side MLE evaluation (4,) at point (log_r+log_c, 4).
+
+    Global convention (mle.py): point = [row_point, col_point], MSB-first.
+    """
+    r_rows, r_cols = point[:com.log_r], point[com.log_r:]
+    u = partial_eval_rows(com.mat, r_rows)      # (C, 4)
+    a = eq_points(r_cols)                       # (C, 4)
+    return fsum(F.f4mul(u, a), axis=0)
+
+
+def _encode_f4_row(u: jnp.ndarray, blowup: int) -> jnp.ndarray:
+    """RS-encode an Fp4 row (C,4) coefficient-wise -> (C*blowup, 4)."""
+    return N.rs_encode(u.T, blowup).T
+
+
+def prove_openings(com: Commitment, points: Sequence[jnp.ndarray],
+                   transcript: Transcript, params: PCSParams) -> OpeningBundle:
+    """Open the commitment at each point. Transcript order: u's, proximity
+    row, then query indices (indices are drawn by the transcript itself)."""
+    us = []
+    for point in points:
+        r_rows = point[:com.log_r]
+        u = partial_eval_rows(com.mat, r_rows)
+        transcript.absorb(u)
+        us.append(np.asarray(u))
+    rho = transcript.challenge_f4_vec(com.mat.shape[0])      # (R, 4)
+    # u_prox[c] = sum_r rho[r] * mat[r, c]  (Fp4 x base, coefficient-wise)
+    u_prox = fsum(F.fmul(rho[:, None, :], com.mat[:, :, None]), axis=0)
+    transcript.absorb(u_prox)
+    n_cols = com.enc.shape[1]
+    idx = transcript.challenge_indices(n_cols, params.queries)
+    columns = np.asarray(com.enc.T[idx])                     # (t, R)
+    paths = M.batch_open(com.tree, idx)
+    return OpeningBundle(us=np.stack(us) if us else np.zeros((0,) + (com.mat.shape[1], 4), np.uint32),
+                         u_prox=np.asarray(u_prox), columns=columns, paths=paths)
+
+
+def verify_openings(root: np.ndarray, log_r: int, log_c: int,
+                    points: Sequence[jnp.ndarray],
+                    claimed_values: Sequence[jnp.ndarray],
+                    bundle: OpeningBundle, transcript: Transcript,
+                    params: PCSParams) -> bool:
+    R, C = 1 << log_r, 1 << log_c
+    n_cols = C * params.blowup
+    if bundle.us.shape[0] != len(points):
+        return False
+    # 1. absorb u rows in order, checking the claimed evaluations
+    enc_us = []
+    bs = []
+    for u_np, point, value in zip(bundle.us, points, claimed_values):
+        u = jnp.asarray(u_np)
+        transcript.absorb(u)
+        a = eq_points(point[log_r:])
+        got = fsum(F.f4mul(u, a), axis=0)
+        if not np.array_equal(np.asarray(got), np.asarray(value)):
+            return False
+        bs.append(eq_points(point[:log_r]))                  # (R, 4)
+        enc_us.append(_encode_f4_row(u, params.blowup))      # (n_cols, 4)
+    # 2. proximity row
+    rho = transcript.challenge_f4_vec(R)
+    u_prox = jnp.asarray(bundle.u_prox)
+    transcript.absorb(u_prox)
+    enc_prox = _encode_f4_row(u_prox, params.blowup)
+    # 3. queries — fully vectorized over the t query columns
+    idx = transcript.challenge_indices(n_cols, params.queries)
+    if bundle.columns.shape != (params.queries, R):
+        return False
+    for q, (j, path) in enumerate(zip(idx, bundle.paths)):
+        if path.index != int(j):
+            return False
+    cols = jnp.asarray(bundle.columns)                       # (t, R)
+    if not M.verify_paths_batch(root, cols, bundle.paths):
+        return False
+    cols4 = cols[:, :, None]                                 # (t, R, 1)
+    idx_np = np.asarray(idx)
+    for b, enc_u in zip(bs, enc_us):
+        lhs = fsum(F.fmul(b[None], cols4), axis=1)           # (t, 4)
+        if not np.array_equal(np.asarray(lhs),
+                              np.asarray(enc_u[idx_np])):
+            return False
+    lhs = fsum(F.fmul(rho[None], cols4), axis=1)
+    if not np.array_equal(np.asarray(lhs), np.asarray(enc_prox[idx_np])):
+        return False
+    return True
+
+
+# ---------------------------------------------------------------------------
+# Fp4-valued witnesses (LogUp inverse columns): 4 coefficient commitments.
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass
+class CommitmentF4:
+    coeffs: List[Commitment]     # 4 base-field commitments
+
+    @property
+    def roots(self) -> np.ndarray:
+        return np.stack([c.root for c in self.coeffs])
+
+
+def commit_f4(vec4: jnp.ndarray, params: PCSParams) -> CommitmentF4:
+    return CommitmentF4(coeffs=[commit(vec4[:, i], params) for i in range(4)])
+
+
+def eval_f4_at(com: CommitmentF4, point: jnp.ndarray) -> jnp.ndarray:
+    """MLE eval of the Fp4-valued vector: sum_k x^k * V_k(point)."""
+    acc = None
+    for k, c in enumerate(com.coeffs):
+        vk = eval_at(c, point)                               # (4,)
+        basis = F.f4zero(()).at[k].set(np.uint32(F.R_MOD_P))
+        term = F.f4mul(vk, basis)
+        acc = term if acc is None else F.f4add(acc, term)
+    return acc
+
+
+def combine_f4_values(values: Sequence[jnp.ndarray]) -> jnp.ndarray:
+    acc = None
+    for k, vk in enumerate(values):
+        basis = F.f4zero(()).at[k].set(np.uint32(F.R_MOD_P))
+        term = F.f4mul(jnp.asarray(vk), basis)
+        acc = term if acc is None else F.f4add(acc, term)
+    return acc

@@ -1,0 +1,185 @@
+"""Poseidon2 permutation/sponge over BabyBear (width 16, x^7, RF=8, RP=13).
+
+Field-native hashing is the TPU-adaptation replacement for the paper's SHA-256
+commitment chain (DESIGN.md §2): SHA-256 is a bit-oriented ARX design with no
+efficient mapping to 32-bit field lanes, while Poseidon2 is exactly the
+arithmetic this codebase already vectorizes.
+
+Round constants are derived deterministically from SHA-256 in counter mode
+(domain-separated seed). Structurally this is Poseidon2 with the parameters
+plonky3 uses for BabyBear width-16; the constant *values* are self-derived and
+documented as such (see DESIGN.md).
+
+All state arrays are Montgomery-form uint32 with trailing axis WIDTH; any
+leading batch dims are supported (used to hash many Merkle leaves at once).
+"""
+from __future__ import annotations
+
+import functools
+import hashlib
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from . import field as F
+
+WIDTH = 16
+RATE = 8
+CAP = 8
+DIGEST = 8
+RF = 8              # external (full) rounds, split 4 + 4
+RP = 13             # internal (partial) rounds
+ALPHA = 7
+
+_SEED = b"nanozk-poseidon2-babybear-v1"
+
+
+def _derive_constants(n: int, tag: bytes) -> np.ndarray:
+    out = []
+    ctr = 0
+    while len(out) < n:
+        h = hashlib.sha256(_SEED + tag + ctr.to_bytes(4, "little")).digest()
+        for i in range(0, 32, 4):
+            v = int.from_bytes(h[i:i + 4], "little")
+            if v < 2**31:                     # light rejection to trim bias
+                out.append(v % F.P)
+            if len(out) == n:
+                break
+        ctr += 1
+    return np.array(out, dtype=np.int64)
+
+
+# Round constants: full rounds get WIDTH constants each, partial rounds 1.
+_RC_FULL = _derive_constants(RF * WIDTH, b"rc-full").reshape(RF, WIDTH)
+_RC_PART = _derive_constants(RP, b"rc-part")
+
+# Internal diagonal d_i (nonzero; invertibility of J + diag(d) checked below).
+_DIAG = _derive_constants(WIDTH, b"diag")
+_DIAG[_DIAG == 0] = 1
+_det_factor = (1 + sum(pow(int(d), F.P - 2, F.P) for d in _DIAG)) % F.P
+assert _det_factor != 0, "internal matrix J+diag(d) must be invertible"
+
+# Montgomery-form device constants.
+_RC_FULL_M = jnp.asarray((_RC_FULL * F._R % F.P).astype(np.uint32))
+_RC_PART_M = jnp.asarray((_RC_PART * F._R % F.P).astype(np.uint32))
+_DIAG_M = jnp.asarray((_DIAG * F._R % F.P).astype(np.uint32))
+
+# Poseidon2 external 4x4 block (applied per 4-lane chunk, then column sums).
+_M4 = np.array([[5, 7, 1, 3],
+                [4, 6, 1, 1],
+                [1, 3, 5, 7],
+                [1, 1, 4, 6]], dtype=np.int64)
+
+
+def _smul(x: jnp.ndarray, k: int) -> jnp.ndarray:
+    """Multiply Montgomery element by a small public integer via doubling."""
+    acc = None
+    base = x
+    while k:
+        if k & 1:
+            acc = base if acc is None else F.fadd(acc, base)
+        base = F.fadd(base, base)
+        k >>= 1
+    return acc if acc is not None else F.fzero(jnp.shape(x))
+
+
+def _external_linear(state: jnp.ndarray) -> jnp.ndarray:
+    """M_E: apply M4 to each 4-lane block, then add per-position block sums."""
+    s = state.reshape(state.shape[:-1] + (WIDTH // 4, 4))
+    cols = [s[..., j] for j in range(4)]
+    new_cols = []
+    for i in range(4):
+        acc = _smul(cols[0], int(_M4[i, 0]))
+        for j in range(1, 4):
+            acc = F.fadd(acc, _smul(cols[j], int(_M4[i, j])))
+        new_cols.append(acc)
+    s = jnp.stack(new_cols, axis=-1)
+    # per-position sums over the 4 blocks, with mod-p adds
+    tot = s[..., 0, :]
+    for b in range(1, WIDTH // 4):
+        tot = F.fadd(tot, s[..., b, :])
+    s = F.fadd(s, tot[..., None, :])
+    return s.reshape(state.shape)
+
+
+def _internal_linear(state: jnp.ndarray) -> jnp.ndarray:
+    """M_I = J + diag(d): y_i = d_i*x_i + sum(x)."""
+    tot = state[..., 0]
+    for i in range(1, WIDTH):
+        tot = F.fadd(tot, state[..., i])
+    return F.fadd(F.fmul(state, _DIAG_M), tot[..., None])
+
+
+def _sbox(x: jnp.ndarray) -> jnp.ndarray:
+    x2 = F.fmul(x, x)
+    x3 = F.fmul(x2, x)
+    x4 = F.fmul(x2, x2)
+    return F.fmul(x4, x3)
+
+
+def _permute_impl(state: jnp.ndarray) -> jnp.ndarray:
+    """Poseidon2 permutation; rounds run under lax.scan so the traced graph
+    stays one-round-sized (unrolling all 21 rounds exploded XLA compile
+    times ~40x — EXPERIMENTS.md §Perf, prover iteration 2)."""
+    def full_round(st, rc):
+        st = F.fadd(st, rc)
+        st = _sbox(st)
+        return _external_linear(st), None
+
+    def partial_round(st, rc):
+        s0 = _sbox(F.fadd(st[..., 0], rc))
+        st = st.at[..., 0].set(s0)
+        return _internal_linear(st), None
+
+    state = _external_linear(state)
+    state, _ = jax.lax.scan(full_round, state, _RC_FULL_M[:RF // 2])
+    state, _ = jax.lax.scan(partial_round, state, _RC_PART_M)
+    state, _ = jax.lax.scan(full_round, state, _RC_FULL_M[RF // 2:])
+    return state
+
+
+permute = jax.jit(_permute_impl)
+
+
+# ---------------------------------------------------------------------------
+# Sponge hashing of fixed-length field-element vectors (batched).
+# ---------------------------------------------------------------------------
+@functools.partial(jax.jit, static_argnames=("n",))
+def _hash_impl(elems: jnp.ndarray, n: int) -> jnp.ndarray:
+    batch = elems.shape[:-1]
+    state = jnp.zeros(batch + (WIDTH,), dtype=jnp.uint32)
+    state = state.at[..., RATE].set(F.fconst(n, batch))  # length tag
+    # always scan: keeps the traced graph one-permute-sized per shape
+    chunks = elems.reshape(batch + (-1, RATE))
+    chunks = jnp.moveaxis(chunks, -2, 0)
+
+    def step(st, chunk):
+        st = st.at[..., :RATE].set(F.fadd(st[..., :RATE], chunk))
+        return _permute_impl(st), None
+    state, _ = jax.lax.scan(step, state, chunks)
+    return state[..., :DIGEST]
+
+
+def hash_elems(elems: jnp.ndarray) -> jnp.ndarray:
+    """Hash along the trailing axis -> digests of shape (..., DIGEST).
+
+    Montgomery-form in, Montgomery-form out. Length is bound into the
+    capacity, making the scheme prefix-free across lengths. Jitted per
+    shape; the sponge loop scans for long messages.
+    """
+    n = elems.shape[-1]
+    pad = (-n) % RATE
+    if pad:
+        elems = jnp.concatenate(
+            [elems, jnp.zeros(elems.shape[:-1] + (pad,), dtype=jnp.uint32)],
+            axis=-1)
+    return _hash_impl(elems, n)
+
+
+@jax.jit
+def compress(left: jnp.ndarray, right: jnp.ndarray) -> jnp.ndarray:
+    """2-to-1 compression on DIGEST-sized nodes with Davies-Meyer feedforward."""
+    state = jnp.concatenate([left, right], axis=-1)
+    out = _permute_impl(state)[..., :DIGEST]
+    return F.fadd(out, left)

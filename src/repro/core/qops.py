@@ -1,0 +1,231 @@
+"""Quantized reference ops: the EXACT integer semantics of the circuit.
+
+The deployed quantized model and the ZK circuit share these functions —
+the witness trace is produced by running them, so "the model the user gets"
+and "the model the proof talks about" are the same object. This is the
+strongest form of the paper's zero-compromise claim (§4.3): accuracy
+experiments (Table 5) run THIS pipeline, not a float approximation of it.
+
+Conventions:
+* Activations: signed 16-bit fixed point, f=8 fractional bits, stored
+  feature-major (d, seq) — "token = column". Feature-major makes per-head
+  and half-rotation sub-tensors contiguous slices of the flat witness.
+* All intermediate integers are asserted to stay within the circuit's
+  provable ranges (DESIGN.md §2); violations raise, loudly, both here and
+  at proving time. Trained models of the paper's scale satisfy them.
+* Rounding: round-half-up via floor((x + 2^(s-1)) >> s) everywhere, which
+  is exactly the circuit's rescale relation.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict, Optional
+
+import numpy as np
+
+from . import luts as LUTS
+
+F8 = 8           # activation fractional bits
+EXP_FOUT = LUTS.EXP.f_out
+SOFTMAX_T = 8    # P carries f=8
+
+
+def rshift_round(x: np.ndarray, s: int) -> np.ndarray:
+    """Round-half-up arithmetic shift (the rescale relation's semantics)."""
+    return (x + (1 << (s - 1))) >> s
+
+
+def assert16(x: np.ndarray, what: str) -> np.ndarray:
+    assert x.min() >= -(1 << 15) and x.max() < (1 << 15), \
+        f"{what} exceeds provable 16-bit range: [{x.min()}, {x.max()}]"
+    return x
+
+
+def lut_apply(name: str, idx: np.ndarray) -> np.ndarray:
+    """Table lookup on idx codes (callers produce in-range idx)."""
+    t = LUTS.table_q(name).astype(np.int64)
+    spec = LUTS.ALL_SPECS[name]
+    lo_code = int(round(spec.lo * (1 << spec.f_in)))
+    i = idx - lo_code
+    assert i.min() >= 0 and i.max() < LUTS.LUT_SIZE, \
+        f"{name} LUT input out of range [{spec.lo}, {spec.hi})"
+    return t[i], i
+
+
+def clamp_code(x: np.ndarray, name: str) -> np.ndarray:
+    """Clamp a code (at that LUT's f_in) into the table's domain."""
+    spec = LUTS.ALL_SPECS[name]
+    lo_code = int(round(spec.lo * (1 << spec.f_in)))
+    return np.clip(x, lo_code, lo_code + LUTS.LUT_SIZE - 1)
+
+
+# ---------------------------------------------------------------------------
+# Layer ops. Each returns (result, trace-dict of named intermediates).
+# ---------------------------------------------------------------------------
+def q_layernorm(x: np.ndarray, g: np.ndarray, b: Optional[np.ndarray],
+                subtract_mean: bool = True) -> Dict[str, np.ndarray]:
+    """x: (d, seq) f8 -> y: (d, seq) f8. Returns full trace.
+
+    Steps (all proven):
+      mu   = round(colsum(x)/d)                        [if subtract_mean]
+      xc   = x - mu
+      ms   = round(colsum(xc^2) / (d 2^4))             rsqrt LUT input, f=12
+      rst  = rsqrtLUT(ms)                              f=11
+      xn   = round(xc rst / 2^11)                      f=8
+      y    = round((xn g + 2^8 b) / 2^8)               f=8
+    """
+    d, seq = x.shape
+    x = x.astype(np.int64)
+    tr: Dict[str, np.ndarray] = {}
+    if subtract_mean:
+        s1 = x.sum(axis=0)                         # (seq,)
+        mu = (s1 + d // 2) // d
+        tr["mu"] = assert16(mu, "ln mu")
+        tr["e1"] = s1 + d // 2 - d * mu
+        assert tr["e1"].min() >= 0 and tr["e1"].max() < d
+        xc = x - mu[None, :]
+    else:
+        xc = x
+    assert abs(xc).max() < (1 << 15), "ln xc exceeds range"
+    sq = (xc * xc).sum(axis=0)                     # (seq,) f16, < d*2^30
+    D = d << 4                                     # -> ms at f=12
+    ms = (sq + D // 2) // D
+    tr["e2"] = sq + D // 2 - D * ms
+    assert ms.min() >= 0 and ms.max() < (1 << 16), \
+        f"ln mean-square out of rsqrt domain: max {ms.max() / 4096.0}"
+    tr["ms"] = ms
+    rst, _ = lut_apply("rsqrt", ms)                # f=11, <= 20480
+    tr["rst"] = rst
+    xn_acc = xc * rst[None, :]
+    xn = assert16(rshift_round(xn_acc, 11), "ln xn")
+    tr["xn"] = xn
+    tr["err_xn"] = xn_acc + (1 << 10) - (xn << 11)
+    y_acc = xn * g[:, None]
+    if b is not None:
+        y_acc = y_acc + (b[:, None].astype(np.int64) << F8)
+    y = assert16(rshift_round(y_acc, F8), "ln y")
+    tr["y"] = y
+    tr["err_y"] = y_acc + (1 << 7) - (y << F8)
+    return tr
+
+
+def q_matmul_rescale(wT: np.ndarray, x: np.ndarray,
+                     b: Optional[np.ndarray], shift: int
+                     ) -> Dict[str, np.ndarray]:
+    """y = round((wT @ x + 2^8 b) / 2^shift): (n,k)@(k,seq) -> (n,seq)."""
+    acc = wT.astype(np.int64) @ x.astype(np.int64)
+    if b is not None:
+        acc = acc + (b[:, None].astype(np.int64) << F8)
+    y = assert16(rshift_round(acc, shift), "matmul out")
+    err = acc + (1 << (shift - 1)) - (y.astype(np.int64) << shift)
+    assert err.min() >= 0 and err.max() < (1 << shift)
+    return {"y": y, "err": err}
+
+
+def score_mult(dh: int) -> int:
+    """Public multiplier m ~= 2^9/sqrt(dh): score codes = acc*m >> 12."""
+    return int(round((1 << 9) / math.sqrt(dh)))
+
+
+def q_attention_head(q: np.ndarray, k: np.ndarray, v: np.ndarray,
+                     mask: np.ndarray) -> Dict[str, np.ndarray]:
+    """One head. q,k,v: (dh, seq) f8; mask: (seq, seq) 0/1 (row=query).
+
+    scores -> exp LUT -> division-free softmax -> P @ V.
+      sidx = round(qk^T m / 2^12)            exp LUT input (f=13, [-4,4))
+      e    = expLUT(sidx)                    f=6
+      S    = rowsum(mask * e)
+      P    = round(2^8 mask e / S)           via  2^8 M e = P S + vres
+      o    = round(v P^T / 2^8)
+    """
+    dh, seq = q.shape
+    tr: Dict[str, np.ndarray] = {}
+    acc = q.T.astype(np.int64) @ k.astype(np.int64)      # (seq, seq) f16
+    m = score_mult(dh)
+    sacc = acc * m
+    sidx = rshift_round(sacc, 12)
+    # paper §4 / Appendix B: out-of-range scores clamp to [-4, 4) (covers
+    # >99.99% of logits in practice). Clamped entries break the strict
+    # rescale relation, so proofs of clamped traces fail loudly unless
+    # the clamp gate (circuit.g_abs machinery) is wired in — the
+    # DEPLOYED/accuracy path (Table 5) uses the paper's clamp semantics.
+    sidx = np.clip(sidx, -(1 << 15), (1 << 15) - 1)
+    tr["err_s"] = np.clip(sacc + (1 << 11) - (sidx << 12), 0,
+                          (1 << 12) - 1)
+    tr["sidx"] = sidx
+    e, _ = lut_apply("exp", sidx)                        # f=6, < 3495
+    tr["e"] = e
+    me = mask.astype(np.int64) * e
+    S = me.sum(axis=1)                                   # (seq,)
+    assert S.min() >= 1, "empty softmax row"
+    tr["S"] = S
+    # P = round(2^8 me / S): 2^8 me = P S + vres, vres in (-S/2, S/2]
+    num = me << SOFTMAX_T
+    P = (num + S[:, None] // 2) // S[:, None]            # round-half-up-ish
+    vres = num - P * S[:, None]
+    # fix boundary so vres in (-S/2, S/2]  (2*vres == -S needs the bump)
+    fix = vres * 2 <= -S[:, None]
+    P = P - fix.astype(np.int64)
+    vres = num - P * S[:, None]
+    assert (2 * vres > -S[:, None]).all() and (2 * vres <= S[:, None]).all()
+    assert P.min() >= 0 and P.max() <= (1 << SOFTMAX_T), "P out of [0, 256]"
+    tr["P"] = P
+    tr["w1"] = 2 * vres + S[:, None] - 1                 # in [0, 2S)
+    tr["w2"] = 2 * S[:, None] - 1 - tr["w1"]
+    assert tr["w1"].min() >= 0 and tr["w2"].min() >= 0
+    o_acc = v.astype(np.int64) @ P.T                     # (dh, seq) f16
+    o = assert16(rshift_round(o_acc, F8), "attention out")
+    tr["o"] = o
+    tr["err_o"] = o_acc + (1 << 7) - (o << F8)
+    return tr
+
+
+ROPE_F = 13   # cos/sin fixed-point bits (products stay < p/2)
+
+
+def rope_tables(dh: int, seq: int, base: float = 10000.0):
+    """Integer cos/sin tables (dh/2, seq) at f=ROPE_F, rotate-half convention."""
+    half = dh // 2
+    inv_freq = base ** (-np.arange(half) / half)          # (half,)
+    ang = inv_freq[:, None] * np.arange(seq)[None, :]     # (half, seq)
+    C = np.round(np.cos(ang) * (1 << ROPE_F)).astype(np.int64)
+    Sn = np.round(np.sin(ang) * (1 << ROPE_F)).astype(np.int64)
+    return C, Sn
+
+
+def q_rope(x: np.ndarray, C: np.ndarray, Sn: np.ndarray
+           ) -> Dict[str, np.ndarray]:
+    """Rotate-half RoPE on one head, x: (dh, seq) f8."""
+    dh = x.shape[0]
+    half = dh // 2
+    xt, xb = x[:half].astype(np.int64), x[half:].astype(np.int64)
+    acc_t = xt * C - xb * Sn
+    acc_b = xb * C + xt * Sn
+    acc = np.concatenate([acc_t, acc_b], axis=0)
+    y = assert16(rshift_round(acc, ROPE_F), "rope out")
+    err = acc + (1 << (ROPE_F - 1)) - (y << ROPE_F)
+    assert err.min() >= 0 and err.max() < (1 << ROPE_F)
+    return {"y": y, "err": err}
+
+
+def q_silu_gate(gate_out: np.ndarray, up: np.ndarray) -> Dict[str, np.ndarray]:
+    """LLaMA MLP gate: y = round(silu(gate) * up / 2^8); inputs f8."""
+    acc = gate_out.astype(np.int64) * up.astype(np.int64)
+    y = assert16(rshift_round(acc, F8), "silu gate out")
+    err = acc + (1 << 7) - (y << F8)
+    return {"y": y, "err": err}
+
+
+def q_act(name: str, x_acc: np.ndarray, in_shift: int) -> Dict[str, np.ndarray]:
+    """Activation LUT on a pre-activation accumulator.
+
+    x_acc carries f=16; LUT input f_in=12, so idx = round(acc / 2^(in_shift)).
+    Returns idx (f=12 codes, 16-bit), out (f=8 codes).
+    """
+    idx = rshift_round(x_acc, in_shift)
+    err = x_acc + (1 << (in_shift - 1)) - (idx << in_shift)
+    spec = LUTS.ALL_SPECS[name]
+    assert16(idx, f"{name} input (must lie in [{spec.lo}, {spec.hi}))")
+    out, _ = lut_apply(name, idx)
+    return {"idx": idx, "out": out, "err": err}

@@ -1,0 +1,55 @@
+"""16-bit fixed-point quantization (paper §4: f = 8 fractional bits).
+
+The deployed model and the ZK circuit share this representation exactly:
+a real value x is stored as the signed integer q = round(x * 2^f) clamped to
+[-2^15, 2^15 - 1]. Inside the field, q is embedded as q mod P (negative
+values wrap to P + q). All circuit relations (matmul limbs, rescales, LUT
+indices) are stated over these integers, so "the model the user runs" and
+"the model the proof talks about" are the same object — this is what makes
+the paper's zero-degradation claim checkable end to end.
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+
+from . import field as F
+
+FRAC_BITS = 8
+SCALE = 1 << FRAC_BITS            # 256
+QMIN = -(1 << 15)
+QMAX = (1 << 15) - 1
+
+
+def quantize(x: jnp.ndarray) -> jnp.ndarray:
+    """float array -> int32 fixed-point with f=8, saturating."""
+    q = jnp.round(x * SCALE)
+    return jnp.clip(q, QMIN, QMAX).astype(jnp.int32)
+
+
+def dequantize(q: jnp.ndarray) -> jnp.ndarray:
+    return q.astype(jnp.float32) / SCALE
+
+
+def to_field(q: jnp.ndarray) -> jnp.ndarray:
+    """Signed int32 fixed-point -> Montgomery Fp (negatives wrap mod P)."""
+    return F.f_from_int(np.asarray(q))
+
+
+def from_field(a: jnp.ndarray) -> np.ndarray:
+    """Montgomery Fp -> signed int64 in (-P/2, P/2] (centered lift)."""
+    v = F.f_to_int(a)
+    return np.where(v > F.P // 2, v - F.P, v)
+
+
+def requant_shift(acc: jnp.ndarray, extra_frac_bits: int = FRAC_BITS
+                  ) -> jnp.ndarray:
+    """Round-to-nearest arithmetic shift: (acc + 2^{s-1}) >> s, saturate.
+
+    After a fixed-point matmul the accumulator carries 2f fractional bits;
+    this rescale restores f. The circuit proves it with digit decomposition
+    (see circuit.py::RescaleGate) — this is the semantic reference.
+    """
+    s = extra_frac_bits
+    rounded = jnp.right_shift(acc + (1 << (s - 1)), s)
+    return jnp.clip(rounded, QMIN, QMAX).astype(jnp.int32)

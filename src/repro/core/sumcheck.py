@@ -1,0 +1,165 @@
+"""Generic sum-check prover/verifier over Fp4.
+
+Proves claims of the form  S = sum_{z in {0,1}^m} prod_t P_t(z)  where each
+P_t is a multilinear polynomial given by its evaluation vector (2^m, 4).
+Per-round degree equals the number of factors (<= 3 in this codebase:
+[A_r, B_c] for matmuls, [eq, v, f+alpha] for LogUp zero-checks).
+
+Variables are bound from the most-significant index bit downward; the final
+point is reported MSB-first, i.e. point[0] corresponds to the most
+significant index bit — the global convention of mle.py.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import List, Sequence, Tuple
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from . import field as F
+from .mle import fsum
+from .transcript import Transcript
+
+
+@jax.jit
+def _round_kernel(factors: Tuple[jnp.ndarray, ...]):
+    """One sum-check round: returns (g evals at X=0..d, los, diffs)."""
+    d = len(factors)
+    half = factors[0].shape[0] // 2
+    los = tuple(f[:half] for f in factors)
+    his = tuple(f[half:] for f in factors)
+    diffs = tuple(F.f4sub(h, l) for h, l in zip(his, los))
+    cur = list(los)
+    evals = []
+    for t in range(d + 1):
+        if t > 0:
+            cur = [F.f4add(c, dd) for c, dd in zip(cur, diffs)]
+        prod = cur[0]
+        for f in cur[1:]:
+            prod = F.f4mul(prod, f)
+        evals.append(fsum(prod, axis=0))
+    return jnp.stack(evals), los, diffs
+
+
+@jax.jit
+def _fold_kernel(los: Tuple[jnp.ndarray, ...], diffs: Tuple[jnp.ndarray, ...],
+                 c: jnp.ndarray):
+    cb = jnp.broadcast_to(c, los[0].shape)
+    return tuple(F.f4add(l, F.f4mul(cb, dd)) for l, dd in zip(los, diffs))
+
+
+@dataclasses.dataclass
+class SumcheckProof:
+    round_polys: np.ndarray   # (m, d+1, 4) uint32 — g_t evaluated at X=0..d
+    final_evals: np.ndarray   # (num_factors, 4) uint32 — P_t(rho)
+
+
+def _smul4(x: jnp.ndarray, t: int) -> jnp.ndarray:
+    """Multiply Fp4 array by small non-negative integer t."""
+    acc = None
+    base = x
+    while t:
+        if t & 1:
+            acc = base if acc is None else F.f4add(acc, base)
+        base = F.f4add(base, base)
+        t >>= 1
+    return acc if acc is not None else jnp.zeros_like(x)
+
+
+def prove(factors: Sequence[jnp.ndarray], transcript: Transcript
+          ) -> Tuple[SumcheckProof, jnp.ndarray]:
+    """Run the sum-check prover. factors: list of (2^m, 4) Fp4 arrays.
+
+    Returns (proof, point (m,4)). The claimed sum must already have been
+    absorbed by the caller (it gates nothing here but keeps transcripts tied).
+    """
+    factors = [jnp.asarray(f) for f in factors]
+    n = factors[0].shape[0]
+    assert all(f.shape == (n, 4) for f in factors)
+    m = n.bit_length() - 1
+    assert 1 << m == n, "factor length must be a power of two"
+    d = len(factors)
+
+    challenges: List[jnp.ndarray] = []
+    round_polys = []
+    factors = tuple(factors)
+    for _ in range(m):
+        g, los, diffs = _round_kernel(factors)
+        round_polys.append(np.asarray(g))
+        transcript.absorb(g)
+        c = transcript.challenge_f4()
+        challenges.append(c)
+        factors = _fold_kernel(los, diffs, c)
+
+    final_evals = jnp.stack([f[0] for f in factors])  # (d, 4)
+    transcript.absorb(final_evals)
+    # challenges[0] bound the most-significant index bit; under the global
+    # convention (mle.py: point[0] <-> MSB) the point is just the challenge
+    # sequence in order.
+    point = jnp.stack(challenges) if m else jnp.zeros((0, 4), jnp.uint32)
+    return SumcheckProof(round_polys=np.stack(round_polys) if m else
+                         np.zeros((0, d + 1, 4), np.uint32),
+                         final_evals=np.asarray(final_evals)), point
+
+
+@jax.jit
+def _lagrange_eval(g: jnp.ndarray, c: jnp.ndarray) -> jnp.ndarray:
+    """Evaluate the degree-d poly given by evals g at X=0..d, at Fp4 point c."""
+    dp1 = g.shape[0]
+    d = dp1 - 1
+    # weights w_i = prod_{j != i} (i - j)  (small ints, exact)
+    terms = []
+    for i in range(dp1):
+        w = 1
+        for j in range(dp1):
+            if j != i:
+                w = (w * (i - j)) % F.P
+        w_inv = F.fconst(pow(w, F.P - 2, F.P))
+        num = None  # prod_{j != i} (c - j)
+        for j in range(dp1):
+            if j != i:
+                cj = F.f4sub(c, F.f4_from_base(F.fconst(j)))
+                num = cj if num is None else F.f4mul(num, cj)
+        term = F.f4mul(num, F.f4_from_base(w_inv))
+        terms.append(F.f4mul(term, g[i]))
+    acc = terms[0]
+    for t in terms[1:]:
+        acc = F.f4add(acc, t)
+    return acc
+
+
+def verify(claimed_sum: jnp.ndarray, proof: SumcheckProof, num_factors: int,
+           transcript: Transcript) -> Tuple[bool, jnp.ndarray, jnp.ndarray]:
+    """Verify a sum-check proof.
+
+    Returns (ok, point (m,4), final_evals (d,4)). The caller must separately
+    validate each final factor evaluation (via PCS openings / direct evals).
+    """
+    m = proof.round_polys.shape[0]
+    d = num_factors
+    running = jnp.asarray(claimed_sum)
+    challenges = []
+    for t in range(m):
+        g = jnp.asarray(proof.round_polys[t])
+        if g.shape != (d + 1, 4):
+            return False, None, None
+        # g(0) + g(1) must equal the running sum
+        s01 = F.f4add(g[0], g[1])
+        if not np.array_equal(np.asarray(s01), np.asarray(running)):
+            return False, None, None
+        transcript.absorb(g)
+        c = transcript.challenge_f4()
+        challenges.append(c)
+        running = _lagrange_eval(g, c)
+    final_evals = jnp.asarray(proof.final_evals)
+    transcript.absorb(final_evals)
+    prod = final_evals[0]
+    for i in range(1, final_evals.shape[0]):
+        prod = F.f4mul(prod, final_evals[i])
+    if not np.array_equal(np.asarray(prod), np.asarray(running)):
+        return False, None, None
+    point = jnp.stack(challenges) if m else jnp.zeros((0, 4), jnp.uint32)
+    return True, point, final_evals

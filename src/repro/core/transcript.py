@@ -1,0 +1,82 @@
+"""Fiat-Shamir transcript: a duplex Poseidon2 sponge.
+
+The prover and verifier drive identical transcripts; every message that
+influences soundness (commitment roots, claimed sums, round polynomials,
+evaluation claims) is absorbed before the challenge it gates. Challenges are
+field elements read directly from sponge lanes (lanes are uniform in [0, P),
+so no rejection sampling is needed); query indices are reduced mod n, whose
+statistical bias (< n/P) is accounted in the soundness budget (chain.py).
+"""
+from __future__ import annotations
+
+import functools
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from . import field as F
+from . import poseidon2 as P2
+
+
+@functools.partial(jax.jit, static_argnames=("n",))
+def _absorb_impl(state: jnp.ndarray, flat: jnp.ndarray, n: int) -> jnp.ndarray:
+    state = state.at[P2.RATE].set(F.fadd(state[P2.RATE], F.fconst(n)))
+    chunks = flat.reshape(-1, P2.RATE)
+
+    def step(st, chunk):
+        st = st.at[:P2.RATE].set(F.fadd(st[:P2.RATE], chunk))
+        return P2._permute_impl(st), None
+    state, _ = jax.lax.scan(step, state, chunks)
+    return state
+
+
+class Transcript:
+    def __init__(self, domain: str):
+        self._state = jnp.zeros((P2.WIDTH,), dtype=jnp.uint32)
+        self.absorb(F.f_from_int(np.frombuffer(
+            domain.encode()[:32].ljust(32, b"\0"), dtype=np.uint8).astype(np.int64)))
+
+    # -- absorbing ----------------------------------------------------------
+    def absorb(self, elems) -> None:
+        """Absorb a flat (or any-shape) array of Montgomery field elements.
+
+        Length-bound into the capacity (prefix-free); jitted per length.
+        """
+        flat = jnp.ravel(jnp.asarray(elems)).astype(jnp.uint32)
+        n = flat.shape[0]
+        pad = (-n) % P2.RATE
+        if pad:
+            flat = jnp.concatenate([flat, jnp.zeros((pad,), jnp.uint32)])
+        self._state = _absorb_impl(self._state, flat, n)
+
+    def absorb_digest(self, digest) -> None:
+        self.absorb(digest)
+
+    def absorb_int(self, v: int) -> None:
+        self.absorb(F.f_from_int(np.array([v % F.P], np.int64)))
+
+    # -- squeezing ----------------------------------------------------------
+    def _squeeze(self, k: int) -> jnp.ndarray:
+        out = []
+        while len(out) * P2.RATE < k:
+            self._state = P2.permute(self._state)
+            out.append(self._state[:P2.RATE])
+        return jnp.concatenate(out)[:k]
+
+    def challenge_f(self) -> jnp.ndarray:
+        """One Fp challenge (Montgomery scalar)."""
+        return self._squeeze(1)[0]
+
+    def challenge_f4(self) -> jnp.ndarray:
+        """One Fp4 challenge, shape (4,)."""
+        return self._squeeze(4)
+
+    def challenge_f4_vec(self, n: int) -> jnp.ndarray:
+        """n Fp4 challenges, shape (n, 4)."""
+        return self._squeeze(4 * n).reshape(n, 4)
+
+    def challenge_indices(self, n: int, k: int) -> np.ndarray:
+        """k query indices in [0, n). Bias < n/P per index (documented)."""
+        raw = F.f_to_int(self._squeeze(k))
+        return (np.asarray(raw) % n).astype(np.int64)

@@ -1,0 +1,17 @@
+"""Pallas TPU kernels for the prover's compute hot spots.
+
+Four kernels (DESIGN.md §2 — TPU-native adaptation of the proving stack):
+  modmatmul      — BabyBear modular matmul (limb sum-check partial evals)
+  poseidon2      — batched permutation (Merkle leaf hashing / sponges)
+  ntt            — radix-2 NTT over rows (Reed-Solomon encode)
+  sumcheck_fold  — fused round-evaluation + fold for the sum-check prover
+
+Each <name>.py holds the pl.pallas_call with explicit BlockSpec VMEM
+tiling; ops.py exposes jit'd wrappers that fall back to interpret=True on
+CPU (the validation mode used by tests); ref.py re-exports the pure-jnp
+oracles the kernels are checked against.
+
+The in-kernel field arithmetic IS core.field's 16-bit-limb uint32
+Montgomery code — TPUs have 32-bit integer lanes and no 64-bit multiply,
+so the jnp reference path and the kernel bodies share one implementation.
+"""

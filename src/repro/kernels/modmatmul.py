@@ -1,0 +1,75 @@
+"""Pallas kernel: BabyBear modular matmul C = A @ B mod p (Montgomery).
+
+This is the limb-matmul / partial-evaluation hot spot of the sum-check
+prover. TPU mapping: u32 products don't hit the MXU, so the kernel runs
+on the VPU with the 16-bit-limb Montgomery multiply (shared with
+core.field). Tiling: (bm x bk) x (bk x bn) VMEM tiles, grid
+(M/bm, N/bn, K/bk) with K innermost; a VMEM scratch accumulator carries
+the running mod-p sum across K steps so HBM traffic is one read of each
+tile + one write of C.
+
+VMEM budget at the default 128^3 tile: 3 x 64 KiB tiles + the (bm, bk,
+bn)-shaped product intermediate is avoided by an in-register fadd tree
+over bk (the compiler keeps the halving tree in VREGs); dims stay
+multiples of the 8x128 VPU lanes.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core import field as F
+
+
+def _kernel(a_ref, b_ref, c_ref, acc_ref, *, k_steps: int):
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    a = a_ref[...]                      # (bm, bk) u32 Montgomery
+    b = b_ref[...]                      # (bk, bn)
+    # mod-p inner product via limb Montgomery multiply on the VPU
+    prod = F.fmul(a[:, :, None], b[None, :, :])          # (bm, bk, bn)
+    bk = prod.shape[1]
+    while bk > 1:
+        half = bk // 2
+        lo = prod[:, :half]
+        hi = prod[:, half:2 * half]
+        rem = prod[:, 2 * half:]
+        prod = F.fadd(lo, hi)
+        if rem.shape[1]:
+            prod = jnp.concatenate([prod, rem], axis=1)
+        bk = prod.shape[1]
+    acc_ref[...] = F.fadd(acc_ref[...], prod[:, 0])
+
+    @pl.when(pl.program_id(2) == k_steps - 1)
+    def _done():
+        c_ref[...] = acc_ref[...]
+
+
+def modmatmul(a: jnp.ndarray, b: jnp.ndarray, bm: int = 128, bn: int = 128,
+              bk: int = 128, interpret: bool = True) -> jnp.ndarray:
+    """a: (M, K), b: (K, N) uint32 Montgomery -> (M, N) Montgomery."""
+    M, K = a.shape
+    K2, N = b.shape
+    assert K == K2
+    bm, bn, bk = min(bm, M), min(bn, N), min(bk, K)
+    assert M % bm == 0 and N % bn == 0 and K % bk == 0
+    k_steps = K // bk
+    grid = (M // bm, N // bn, k_steps)
+    return pl.pallas_call(
+        functools.partial(_kernel, k_steps=k_steps),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, k: (i, k)),
+            pl.BlockSpec((bk, bn), lambda i, j, k: (k, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((M, N), jnp.uint32),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.uint32)],
+        interpret=interpret,
+    )(a, b)

@@ -1,0 +1,66 @@
+"""Pallas kernel: batched radix-2 NTT (Reed-Solomon row encoding).
+
+One grid step transforms a VMEM-resident tile of rows end-to-end: all
+log2(n) butterfly stages run against VMEM with twiddles as compile-time
+constants, so each row makes exactly one HBM round trip (the jnp
+reference path writes every stage back through HBM — the kernel's whole
+advantage). Row length is capped by VMEM: n <= 2^15 per row tile at
+block=8 rows (8 * 32768 * 4 B = 1 MiB), well inside the ~16 MiB budget
+with double buffering.
+"""
+from __future__ import annotations
+
+import functools
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core import field as F
+from repro.core import ntt as NTT
+
+
+def _kernel(x_ref, tw_ref, o_ref, *, n: int, inverse: bool):
+    x = x_ref[...]                      # (bt, n), PRE-bit-reversed by wrapper
+    tw_full = tw_ref[...][0]            # (n//2,)
+    stages = n.bit_length() - 1
+    for s in range(stages):
+        half = 1 << s
+        stride = n // (2 * half)
+        xe = x.reshape(x.shape[0], n // (2 * half), 2, half)
+        lo, hi = xe[:, :, 0, :], xe[:, :, 1, :]
+        tw = tw_full[::stride][:half]
+        thi = F.fmul(hi, tw)
+        x = jnp.stack([F.fadd(lo, thi), F.fsub(lo, thi)],
+                      axis=2).reshape(x.shape[0], n)
+    if inverse:
+        x = F.fmul(x, F.fconst(pow(n, F.P - 2, F.P)))
+    o_ref[...] = x
+
+
+def ntt_rows(x: jnp.ndarray, inverse: bool = False, block: int = 8,
+             interpret: bool = True) -> jnp.ndarray:
+    """x: (rows, n) uint32 Montgomery; NTT along the trailing axis.
+
+    The bit-reversal permutation happens host-side (a gather XLA fuses
+    into the feed); the kernel runs the log2(n) butterfly stages in one
+    VMEM residency.
+    """
+    rows, n = x.shape
+    assert n & (n - 1) == 0
+    if n == 1:
+        return x
+    block = min(block, rows)
+    assert rows % block == 0
+    x = x[:, NTT._bitrev(n)]
+    tw = jnp.asarray(NTT._twiddles(n, inverse)).reshape(1, -1)
+    return pl.pallas_call(
+        functools.partial(_kernel, n=n, inverse=inverse),
+        grid=(rows // block,),
+        in_specs=[pl.BlockSpec((block, n), lambda i: (i, 0)),
+                  pl.BlockSpec((1, max(n // 2, 1)), lambda i: (0, 0))],
+        out_specs=pl.BlockSpec((block, n), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((rows, n), jnp.uint32),
+        interpret=interpret,
+    )(x, tw)

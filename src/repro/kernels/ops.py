@@ -1,0 +1,38 @@
+"""Jit'd wrappers selecting Pallas kernels (TPU) or interpret mode (CPU).
+
+On TPU the kernels run compiled; on CPU (this container) interpret=True
+executes the kernel bodies in Python for correctness validation — the
+mode the test suite sweeps shapes/dtypes in. `on_tpu()` picks per-backend.
+"""
+from __future__ import annotations
+
+import jax
+
+from . import modmatmul as _mm
+from . import ntt_kernel as _ntt
+from . import poseidon2_kernel as _p2
+from . import sumcheck_fold as _fold
+
+
+def on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def modmatmul(a, b, **kw):
+    kw.setdefault("interpret", not on_tpu())
+    return _mm.modmatmul(a, b, **kw)
+
+
+def poseidon2_permute(states, **kw):
+    kw.setdefault("interpret", not on_tpu())
+    return _p2.permute_batch(states, **kw)
+
+
+def ntt(x, inverse: bool = False, **kw):
+    kw.setdefault("interpret", not on_tpu())
+    return _ntt.ntt_rows(x, inverse=inverse, **kw)
+
+
+def sumcheck_fold(factors, c, **kw):
+    kw.setdefault("interpret", not on_tpu())
+    return _fold.fold_round(factors, c, **kw)

@@ -1,0 +1,57 @@
+"""Pure-jnp oracles for the Pallas kernels (tests assert allclose).
+
+These are the SAME functions the prover uses on CPU — the kernels are a
+faster realization of identical semantics, so equality must be exact
+(integers, not approximate).
+"""
+from __future__ import annotations
+
+from typing import Sequence, Tuple
+
+import jax.numpy as jnp
+
+from repro.core import field as F
+from repro.core import ntt as NTT
+from repro.core import poseidon2 as P2
+from repro.core.mle import fsum
+
+
+def modmatmul_ref(a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """(M,K) @ (K,N) mod p, Montgomery operands (exact integer oracle)."""
+    import numpy as np
+    av = np.asarray(F.f_to_int(a))
+    bv = np.asarray(F.f_to_int(b))
+    cv = (av.astype(object) @ bv.astype(object)) % F.P
+    return F.f_from_int(cv.astype(np.int64))
+
+
+def permute_ref(states: jnp.ndarray) -> jnp.ndarray:
+    return P2.permute(states)
+
+
+def ntt_ref(x: jnp.ndarray, inverse: bool = False) -> jnp.ndarray:
+    return NTT.ntt(x, inverse=inverse)
+
+
+def fold_round_ref(factors: Sequence[jnp.ndarray], c: jnp.ndarray
+                   ) -> Tuple[jnp.ndarray, Tuple[jnp.ndarray, ...]]:
+    """Reference for sumcheck_fold: unfused round evals + fold."""
+    d = len(factors)
+    half = factors[0].shape[0] // 2
+    los = [f[:half] for f in factors]
+    his = [f[half:] for f in factors]
+    diffs = [F.f4sub(h, l) for h, l in zip(his, los)]
+    cur = list(los)
+    evals = []
+    for t in range(d + 1):
+        if t > 0:
+            cur = [F.f4add(x, dd) for x, dd in zip(cur, diffs)]
+        prod = cur[0]
+        for f in cur[1:]:
+            prod = F.f4mul(prod, f)
+        evals.append(fsum(prod, axis=0))
+    g = jnp.stack(evals)
+    cb = jnp.broadcast_to(c, (half, 4))
+    folded = tuple(F.f4add(l, F.f4mul(cb, dd))
+                   for l, dd in zip(los, diffs))
+    return g, folded

@@ -1,0 +1,314 @@
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+MUST set the device-count flag before ANY other import (jax locks device
+count on first init).
+
+Usage:
+  python -m repro.launch.dryrun --arch qwen1_5_0_5b --shape train_4k
+  python -m repro.launch.dryrun --all [--multi-pod] [--out reports/dryrun]
+
+Each cell: jit(step).lower(shapes).compile() on the production mesh,
+printing memory_analysis (proves it fits) and cost_analysis (roofline
+terms). Collective bytes are parsed from the optimized HLO. Reports land
+as JSON for benchmarks/roofline.py and EXPERIMENTS.md.
+"""
+import os
+
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("XLA_FLAGS", ""))
+
+import argparse      # noqa: E402
+import dataclasses   # noqa: E402
+import json          # noqa: E402
+import re            # noqa: E402
+import time          # noqa: E402
+import traceback     # noqa: E402
+from functools import partial  # noqa: E402
+
+import numpy as np   # noqa: E402
+import jax           # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+from jax.sharding import NamedSharding, PartitionSpec as P  # noqa: E402
+
+from repro.configs import ARCHS, SHAPES, get_arch  # noqa: E402
+from repro.launch.mesh import make_production_mesh, mesh_axes  # noqa: E402
+from repro.models import model as MDL  # noqa: E402
+from repro.models.layers import ShardCfg  # noqa: E402
+from repro.optim import adamw  # noqa: E402
+
+# TPU v5e constants for the roofline terms (per chip).
+PEAK_FLOPS = 197e12          # bf16
+HBM_BW = 819e9               # bytes/s
+ICI_BW = 50e9                # bytes/s/link
+
+_DTYPE_BYTES = {"f32": 4, "bf16": 2, "f16": 2, "s32": 4, "u32": 4,
+                "s8": 1, "u8": 1, "pred": 1, "f64": 8, "s64": 8, "u64": 8,
+                "s16": 2, "u16": 2, "f8e4m3fn": 1, "f8e5m2": 1}
+
+_COLL_RE = re.compile(
+    r"(\w[\w.\-]*)\s*=\s*(?:\([^)]*\)|(\w+)\[([\d,]*)\][^=]*?)\s*"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"[\w-]*\(")
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def collective_bytes(hlo_text: str):
+    """Sum output-shape bytes of every collective op in optimized HLO."""
+    out = {"all-gather": 0, "all-reduce": 0, "reduce-scatter": 0,
+           "all-to-all": 0, "collective-permute": 0}
+    for line in hlo_text.splitlines():
+        m = re.search(r"=\s*(.+?)\s+(all-gather|all-reduce|reduce-scatter|"
+                      r"all-to-all|collective-permute)(-start|-done)?\(",
+                      line)
+        if not m or (m.group(3) == "-done"):
+            continue
+        shapes = _SHAPE_RE.findall(m.group(1))
+        total = 0
+        for dt, dims in shapes:
+            if dt not in _DTYPE_BYTES:
+                continue
+            n = 1
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+            total += n * _DTYPE_BYTES[dt]
+        out[m.group(2)] += total
+    return out
+
+
+def hlo_flops_bytes(compiled):
+    ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0]
+    flops = float(ca.get("flops", 0.0))
+    byts = float(ca.get("bytes accessed", 0.0))
+    return flops, byts, {k: v for k, v in ca.items()
+                         if isinstance(v, (int, float)) and
+                         ("bytes" in k or k in ("flops", "transcendentals"))}
+
+
+def memory_report(compiled):
+    ma = compiled.memory_analysis()
+    fields = ["argument_size_in_bytes", "output_size_in_bytes",
+              "temp_size_in_bytes", "alias_size_in_bytes",
+              "generated_code_size_in_bytes"]
+    rep = {}
+    for f in fields:
+        try:
+            rep[f] = int(getattr(ma, f))
+        except Exception:
+            pass
+    return rep
+
+
+def _rough_params(cfg) -> int:
+    d, ff = cfg.d, cfg.d_ff
+    n = cfg.vocab_padded * d * (1 if cfg.tie_embeddings else 2)
+    for spec in cfg.layers:
+        n += 4 * d * cfg.heads * cfg.dh // max(
+            cfg.heads // cfg.kv_heads, 1) + 2 * d * cfg.heads * cfg.dh
+        if spec.moe:
+            n += cfg.n_experts * 3 * d * (cfg.moe_ff or ff)
+        elif ff:
+            n += (3 if cfg.gated_mlp else 2) * d * ff
+    return n
+
+
+def build_cell(arch: str, shape: str, multi_pod: bool):
+    """Returns (jitted fn, example args as ShapeDtypeStructs)."""
+    bundle = get_arch(arch)
+    cfg = bundle.cfg
+    sp = bundle.shape_params(shape)
+    if sp is None:
+        return None, bundle.skip[shape]
+    dp_axes, tp_axis, dp_size, tp_size = mesh_axes(multi_pod)
+    seq, batch, mode = sp["seq"], sp["batch"], sp["mode"]
+    batch_dp = batch % dp_size == 0
+    cache_seq = ()
+    cache_seq_size = 1
+    if mode == "decode":
+        # long caches shard along sequence (flash-decoding combine)
+        cache_axes = (("model",) if batch_dp else
+                      (dp_axes + ("model",)))
+        cache_seq_size = tp_size if batch_dp else dp_size * tp_size
+        if seq % cache_seq_size == 0 and seq >= 8192:
+            cache_seq = cache_axes
+        else:
+            cache_seq_size = 1
+    sh = cfg.shard_cfg(dp=dp_axes, tp_size=tp_size, dp_size=dp_size,
+                       cache_seq=cache_seq, cache_seq_size=cache_seq_size,
+                       batch_dp=batch_dp)
+    if mode in ("decode", "prefill"):
+        # inference: FSDP weight all-gathers add collective overhead —
+        # serve with TP-sharded weights when they fit HBM (16 GB/chip).
+        # Archs with replicated attention (attn_tp=False, e.g. deepseek's
+        # 56 heads) KEEP FSDP: dropping it ballooned per-step weight
+        # reads 42.6 -> 103 ms (regression caught by the final sweep,
+        # EXPERIMENTS.md §Perf C).
+        import dataclasses as _dc
+        pbytes = 2 * _rough_params(cfg)
+        if pbytes / tp_size < 8e9 and (cfg.attn_tp or pbytes < 4e9):
+            sh = _dc.replace(sh, fsdp=False)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    ns = lambda spec: jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, s), spec,
+        is_leaf=lambda s: isinstance(s, P))
+    p_shapes = MDL.shapes(cfg, sh, scan_layers=True)
+    p_specs = MDL.specs(cfg, sh, scan_layers=True)
+    dp = dp_axes if batch_dp else None
+
+    enc_shape = None
+    if cfg.encoder is not None:
+        enc_shape = jax.ShapeDtypeStruct(
+            (batch, cfg.encoder.frames, cfg.d), cfg.dtype)
+
+    if mode == "train":
+        opt_cfg = adamw.AdamWCfg()
+        opt_shapes = jax.eval_shape(adamw.init, p_shapes)
+        opt_specs = adamw.state_specs(p_specs)
+        tok = jax.ShapeDtypeStruct((batch, seq), jnp.int32)
+
+        def train_step(params, opt_state, tokens, labels, enc=None):
+            def lf(p):
+                return MDL.loss_fn(cfg, sh, p, tokens, labels,
+                                   enc_input=enc, remat=True)
+            loss, grads = jax.value_and_grad(lf)(params)
+            new_params, new_opt, metrics = adamw.update(
+                opt_cfg, opt_state, params, grads)
+            metrics["loss"] = loss
+            return new_params, new_opt, metrics
+
+        in_sh = (ns(p_specs), ns(opt_specs), ns(P(dp, None)),
+                 ns(P(dp, None)))
+        args = (p_shapes, opt_shapes, tok, tok)
+        if enc_shape is not None:
+            in_sh = in_sh + (ns(P(dp, None, None)),)
+            args = args + (enc_shape,)
+        fn = jax.jit(train_step, in_shardings=in_sh,
+                     out_shardings=(ns(p_specs), ns(opt_specs), None))
+        return (fn, args, mesh, sh), None
+
+    if mode == "prefill":
+        tok = jax.ShapeDtypeStruct((batch, seq), jnp.int32)
+
+        def prefill(params, tokens, enc=None):
+            logits, _, _ = MDL.forward(cfg, sh, params, tokens,
+                                       enc_input=enc, remat=False)
+            return logits
+
+        in_sh = (ns(p_specs), ns(P(dp, None)))
+        args = (p_shapes, tok)
+        if enc_shape is not None:
+            in_sh = in_sh + (ns(P(dp, None, None)),)
+            args = args + (enc_shape,)
+        fn = jax.jit(prefill, in_shardings=in_sh, out_shardings=None)
+        return (fn, args, mesh, sh), None
+
+    # decode: one token against a cache of length seq
+    cache_shapes = jax.eval_shape(
+        partial(MDL.make_caches, cfg, sh, batch, seq, scan_layers=True))
+    c_specs = MDL.cache_specs(cfg, sh, scan_layers=True)
+    tok = jax.ShapeDtypeStruct((batch, 1), jnp.int32)
+    pos = jax.ShapeDtypeStruct((batch,), jnp.int32)
+
+    def serve_step(params, caches, token, pos_, enc=None):
+        return MDL.decode_step(cfg, sh, params, token, pos_, caches,
+                               enc_input=enc)
+
+    in_sh = (ns(p_specs), ns(c_specs), ns(P(dp, None)), ns(P(dp)))
+    args = (p_shapes, cache_shapes, tok, pos)
+    if enc_shape is not None:
+        in_sh = in_sh + (ns(P(dp, None, None)),)
+        args = args + (enc_shape,)
+    fn = jax.jit(serve_step, in_shardings=in_sh,
+                 out_shardings=(None, ns(c_specs)))
+    return (fn, args, mesh, sh), None
+
+
+def run_cell(arch: str, shape: str, multi_pod: bool, out_dir: str):
+    mesh_name = "2x16x16" if multi_pod else "16x16"
+    tag = f"{arch}.{shape}.{mesh_name}"
+    built, skip_reason = build_cell(arch, shape, multi_pod)
+    if built is None:
+        print(f"[SKIP] {tag}: {skip_reason}")
+        rec = {"cell": tag, "status": "skip", "reason": skip_reason}
+        os.makedirs(out_dir, exist_ok=True)
+        with open(os.path.join(out_dir, tag + ".json"), "w") as f:
+            json.dump(rec, f, indent=1)
+        return rec
+    fn, args, mesh, sh = built
+    rec = {"cell": tag, "arch": arch, "shape": shape, "mesh": mesh_name,
+           "status": "ok"}
+    try:
+        with mesh:
+            t0 = time.time()
+            lowered = fn.lower(*args)
+            rec["lower_s"] = round(time.time() - t0, 2)
+            t0 = time.time()
+            compiled = lowered.compile()
+            rec["compile_s"] = round(time.time() - t0, 2)
+        flops, byts, extra = hlo_flops_bytes(compiled)
+        mem = memory_report(compiled)
+        coll = collective_bytes(compiled.as_text())
+        n_chips = 512 if multi_pod else 256
+        # cost_analysis is per-device for SPMD lowering
+        rec.update(
+            hlo_flops_per_dev=flops, hlo_bytes_per_dev=byts,
+            cost_extra=extra, memory=mem, collectives_per_dev=coll,
+            n_chips=n_chips,
+            compute_s=flops / PEAK_FLOPS,
+            memory_s=byts / HBM_BW,
+            collective_s=sum(coll.values()) / ICI_BW,
+        )
+        dom = max(("compute_s", "memory_s", "collective_s"),
+                  key=lambda k: rec[k])
+        rec["bottleneck"] = dom
+        print(f"[OK] {tag}: lower {rec['lower_s']}s compile "
+              f"{rec['compile_s']}s | flops/dev {flops:.3e} bytes/dev "
+              f"{byts:.3e} coll/dev {sum(coll.values()):.3e} | "
+              f"compute {rec['compute_s']*1e3:.2f}ms memory "
+              f"{rec['memory_s']*1e3:.2f}ms collective "
+              f"{rec['collective_s']*1e3:.2f}ms -> {dom}")
+        print(f"     memory_analysis: {mem}")
+    except Exception as e:  # noqa: BLE001
+        rec["status"] = "fail"
+        rec["error"] = f"{type(e).__name__}: {e}"
+        print(f"[FAIL] {tag}: {rec['error']}")
+        traceback.print_exc()
+    os.makedirs(out_dir, exist_ok=True)
+    with open(os.path.join(out_dir, tag + ".json"), "w") as f:
+        json.dump(rec, f, indent=1)
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--out", default="reports/dryrun")
+    args = ap.parse_args()
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+    cells = []
+    if args.all:
+        archs = [a for a in ARCHS if a not in ("gpt2_small",
+                                               "tinyllama_1_1b")]
+        cells = [(a, s) for a in archs for s in SHAPES]
+    else:
+        cells = [(args.arch, args.shape)]
+    results = []
+    for mp in meshes:
+        for a, s in cells:
+            results.append(run_cell(a, s, mp, args.out))
+    n_ok = sum(r["status"] == "ok" for r in results)
+    n_skip = sum(r["status"] == "skip" for r in results)
+    n_fail = sum(r["status"] == "fail" for r in results)
+    print(f"\n== dry-run: {n_ok} ok, {n_skip} skip, {n_fail} fail ==")
+    return 1 if n_fail else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,30 @@
+"""Production mesh construction (single-pod 16x16, multi-pod 2x16x16).
+
+A function, not a module-level constant: importing this module never
+touches jax device state (the dry-run launcher sets
+XLA_FLAGS=--xla_force_host_platform_device_count=512 BEFORE importing
+jax; everything else sees the real single device).
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def mesh_axes(multi_pod: bool) -> Tuple[Tuple[str, ...], str, int, int]:
+    """(dp_axes, tp_axis, dp_size, tp_size) for a production mesh."""
+    if multi_pod:
+        return ("pod", "data"), "model", 32, 16
+    return ("data",), "model", 16, 16
+
+
+def make_debug_mesh(dp: int = 1, tp: int = 1):
+    """Tiny mesh for CPU tests (requires dp*tp <= local device count)."""
+    return jax.make_mesh((dp, tp), ("data", "model"))

@@ -1,0 +1,176 @@
+"""Distributed training driver.
+
+Composes the substrates: sharded params/optimizer (FSDP+TP), gradient
+accumulation microbatching, int8 gradient compression with error feedback,
+remat, async checkpointing with atomic commits, deterministic data
+pipeline, heartbeat/straggler monitoring, and elastic restart (resume from
+the latest checkpoint under whatever mesh the new invocation brings up).
+
+CPU-scale usage (examples/train_small.py drives this):
+  python -m repro.launch.train --arch gpt2_small --steps 200 --smoke
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import os
+import time
+from functools import partial
+from typing import Any, Dict, Optional
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.checkpoint import checkpoint as ckpt
+from repro.configs import get_arch
+from repro.data.pipeline import DataPipeline, SyntheticCorpus
+from repro.launch.mesh import make_debug_mesh, make_production_mesh, \
+    mesh_axes
+from repro.models import model as MDL
+from repro.models.layers import ShardCfg
+from repro.optim import adamw, compression
+from repro.runtime.fault import HeartbeatMonitor
+
+
+@dataclasses.dataclass
+class TrainCfg:
+    steps: int = 200
+    batch: int = 8
+    seq: int = 128
+    microbatches: int = 1
+    compress_grads: bool = False
+    remat: bool = True
+    scan_layers: bool = False
+    ckpt_dir: str = "checkpoints"
+    ckpt_every: int = 100
+    log_every: int = 10
+    seed: int = 0
+
+
+def make_train_step(cfg, sh, opt_cfg: adamw.AdamWCfg, train_cfg: TrainCfg):
+    """Grad-accumulation step; optional int8 compression before update."""
+
+    def micro_loss(params, tokens, labels):
+        return MDL.loss_fn(cfg, sh, params, tokens, labels,
+                           remat=train_cfg.remat)
+
+    def step(params, opt_state, ef_state, tokens, labels):
+        nm = train_cfg.microbatches
+        B = tokens.shape[0]
+        mb = B // nm
+
+        def one(carry, i):
+            gsum, lsum = carry
+            sl = lambda x: jax.lax.dynamic_slice_in_dim(x, i * mb, mb, 0)
+            loss, g = jax.value_and_grad(micro_loss)(params, sl(tokens),
+                                                     sl(labels))
+            gsum = jax.tree_util.tree_map(
+                lambda a, b: a + b.astype(jnp.float32), gsum, g)
+            return (gsum, lsum + loss), None
+
+        zeros = jax.tree_util.tree_map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        (gsum, lsum), _ = jax.lax.scan(one, (zeros, 0.0),
+                                       jnp.arange(nm))
+        grads = jax.tree_util.tree_map(lambda g: g / nm, gsum)
+        if train_cfg.compress_grads:
+            codes, scales, ef_state = compression.compress_tree(grads,
+                                                                ef_state)
+            grads = compression.decompress_tree(codes, scales)
+        new_params, new_opt, metrics = adamw.update(opt_cfg, opt_state,
+                                                    params, grads)
+        metrics["loss"] = lsum / nm
+        return new_params, new_opt, ef_state, metrics
+
+    return step
+
+
+def train(arch: str, train_cfg: TrainCfg, smoke: bool = True,
+          mesh=None, multi_pod: bool = False,
+          resume: bool = True) -> Dict[str, Any]:
+    bundle = get_arch(arch)
+    cfg = bundle.smoke if smoke else bundle.cfg
+    if mesh is None:
+        mesh = make_debug_mesh(1, 1)
+        sh = cfg.shard_cfg(dp=("data",), tp_size=1, dp_size=1)
+    else:
+        dp_axes, _, dp_size, tp_size = mesh_axes(multi_pod)
+        sh = cfg.shard_cfg(dp=dp_axes, tp_size=tp_size, dp_size=dp_size)
+
+    rng = jax.random.PRNGKey(train_cfg.seed)
+    opt_cfg = adamw.AdamWCfg(total_steps=train_cfg.steps)
+    pipeline = DataPipeline(SyntheticCorpus(cfg.vocab, train_cfg.seed),
+                            train_cfg.batch, train_cfg.seq)
+    monitor = HeartbeatMonitor(["host0"])
+
+    p_specs = MDL.specs(cfg, sh, train_cfg.scan_layers)
+    ns = jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, s), p_specs,
+        is_leaf=lambda s: isinstance(s, P))
+
+    with mesh:
+        params = MDL.init(cfg, sh, rng, train_cfg.scan_layers)
+        opt_state = adamw.init(params)
+        ef_state = compression.init_ef(params) \
+            if train_cfg.compress_grads else compression.EFState(residual=0)
+        start = 0
+        if resume and ckpt.latest_step(train_cfg.ckpt_dir) is not None:
+            (params, opt_state), manifest = ckpt.restore(
+                (params, opt_state), train_cfg.ckpt_dir)
+            # restore returns host arrays; place on device (under a real
+            # mesh this is where elastic resharding happens)
+            params = jax.tree_util.tree_map(jnp.asarray, params)
+            opt_state = jax.tree_util.tree_map(jnp.asarray, opt_state)
+            start = manifest["step"]
+            if "pipeline" in manifest["extra"]:
+                pipeline.restore(manifest["extra"]["pipeline"])
+            print(f"[train] elastic resume from step {start}")
+
+        step_fn = jax.jit(make_train_step(cfg, sh, opt_cfg, train_cfg),
+                          donate_argnums=(0, 1))
+        losses = []
+        for step in range(start, train_cfg.steps):
+            t0 = time.time()
+            toks, labels = pipeline.next_batch()
+            params, opt_state, ef_state, metrics = step_fn(
+                params, opt_state, ef_state, jnp.asarray(toks),
+                jnp.asarray(labels))
+            dt = time.time() - t0
+            monitor.beat("host0", dt)
+            losses.append(float(metrics["loss"]))
+            if step % train_cfg.log_every == 0:
+                print(f"[train] step {step} loss {losses[-1]:.4f} "
+                      f"gnorm {float(metrics['grad_norm']):.3f} "
+                      f"({dt*1e3:.0f} ms)")
+            if (step + 1) % train_cfg.ckpt_every == 0:
+                ckpt.save_async((params, opt_state), train_cfg.ckpt_dir,
+                                step + 1,
+                                extra={"pipeline": pipeline.state()})
+        ckpt.wait_pending()
+    return {"params": params, "losses": losses, "cfg": cfg, "sh": sh,
+            "mesh": mesh}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="gpt2_small")
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--compress-grads", action="store_true")
+    ap.add_argument("--ckpt-dir", default="checkpoints")
+    args = ap.parse_args()
+    tc = TrainCfg(steps=args.steps, batch=args.batch, seq=args.seq,
+                  microbatches=args.microbatches,
+                  compress_grads=args.compress_grads,
+                  ckpt_dir=args.ckpt_dir)
+    out = train(args.arch, tc, smoke=args.smoke)
+    print(f"final loss: {out['losses'][-1]:.4f}")
+
+
+if __name__ == "__main__":
+    main()

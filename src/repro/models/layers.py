@@ -1,0 +1,563 @@
+"""Sharded layer library: the float serving/training path for all archs.
+
+Every layer takes explicit parameter dicts (pytrees of jnp arrays) plus a
+ShardCfg describing how tensors map onto the production mesh
+(launch/mesh.py). Sharding is expressed with PartitionSpecs attached to
+parameters (collected by ParamSpec trees) and with_sharding_constraint on
+activations; XLA/GSPMD inserts the collectives.
+
+TP resolver rules (DESIGN.md §5):
+* attention heads sharded over "model" iff heads % tp == 0 (optionally
+  padded up by the config); otherwise attention is replicated and TP
+  applies to the MLP + vocab only (e.g. gemma3-1b with 4 heads).
+* kv heads sharded iff kv_heads % tp == 0, else replicated (GQA kv is
+  small; the decode path can instead shard the KV cache along SEQUENCE
+  for flash-decoding style partial-softmax combines).
+* MoE: experts sharded over "model" iff n_experts % tp == 0 (EP),
+  else every expert's d_ff is TP-sharded (grok-1: 8 experts, tp=16).
+* FSDP: weight d_in dims sharded over ("pod","data") when divisible.
+
+The LUT-approximated deployed model (paper §4) is available through
+use_lut=True — softmax-exp/GELU/SiLU/rsqrt route through core.luts so the
+served outputs match the provable pipeline's operating ranges.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.core import luts as LUTS
+
+DTYPE = jnp.bfloat16
+
+
+# ---------------------------------------------------------------------------
+# Sharding configuration + helpers.
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class ShardCfg:
+    dp: Tuple[str, ...] = ("pod", "data")   # batch / FSDP axes
+    tp: str = "model"
+    tp_size: int = 16
+    dp_size: int = 32
+    attn_tp: bool = True
+    kv_tp: bool = False
+    moe_ep: bool = True          # experts sharded over tp axis
+    fsdp: bool = True            # shard weight d_in over dp axes
+    # decode KV caches sharded along SEQUENCE over these axes — the
+    # flash-decoding pattern: scores/output einsums contract the sharded
+    # seq dim, GSPMD turns the softmax denominator + output into psums.
+    cache_seq: Tuple[str, ...] = ()
+    cache_seq_size: int = 1      # product of cache_seq axis sizes
+    batch_dp: bool = True        # batch shardable over dp (False if B=1)
+
+    def fs(self, dim: int):
+        """FSDP axes for a weight's d_in dimension (None if indivisible)."""
+        if not self.fsdp:
+            return None
+        total = self.dp_size
+        return self.dp if dim % total == 0 else None
+
+    @property
+    def bdp(self):
+        return self.dp if self.batch_dp else None
+
+
+def cstr(x: jnp.ndarray, spec: P) -> jnp.ndarray:
+    """with_sharding_constraint that is a no-op outside a mesh context."""
+    try:
+        return jax.lax.with_sharding_constraint(x, spec)
+    except (ValueError, RuntimeError):
+        return x
+
+
+@dataclasses.dataclass
+class ParamDef:
+    shape: Tuple[int, ...]
+    spec: P
+    init_scale: float = 0.02
+    dtype: Any = DTYPE
+    zero: bool = False
+
+
+def init_params(defs, rng: jax.Array):
+    flat, treedef = jax.tree_util.tree_flatten(
+        defs, is_leaf=lambda x: isinstance(x, ParamDef))
+    keys = jax.random.split(rng, len(flat))
+    leaves = []
+    for d, k in zip(flat, keys):
+        if d.zero:
+            leaves.append(jnp.zeros(d.shape, d.dtype))
+        else:
+            leaves.append(jax.random.normal(k, d.shape, d.dtype)
+                          * d.init_scale)
+    return jax.tree_util.tree_unflatten(treedef, leaves)
+
+
+def param_specs(defs):
+    return jax.tree_util.tree_map(
+        lambda d: d.spec, defs,
+        is_leaf=lambda x: isinstance(x, ParamDef))
+
+
+def param_shapes(defs):
+    return jax.tree_util.tree_map(
+        lambda d: jax.ShapeDtypeStruct(d.shape, d.dtype), defs,
+        is_leaf=lambda x: isinstance(x, ParamDef))
+
+
+# ---------------------------------------------------------------------------
+# Norms.
+# ---------------------------------------------------------------------------
+def rmsnorm(x: jnp.ndarray, g: jnp.ndarray, eps: float = 1e-6,
+            use_lut: bool = False) -> jnp.ndarray:
+    ms = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    if use_lut:
+        r = LUTS.apply("rsqrt", ms + eps)
+    else:
+        r = jax.lax.rsqrt(ms + eps)
+    return (x.astype(jnp.float32) * r).astype(x.dtype) * (1.0 + g)
+
+
+def layernorm(x: jnp.ndarray, g: jnp.ndarray, b: jnp.ndarray,
+              eps: float = 1e-5, use_lut: bool = False) -> jnp.ndarray:
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(xf - mu), axis=-1, keepdims=True)
+    if use_lut:
+        r = LUTS.apply("rsqrt", var + eps)
+    else:
+        r = jax.lax.rsqrt(var + eps)
+    return ((xf - mu) * r).astype(x.dtype) * g + b
+
+
+def norm_defs(kind: str, d: int) -> Dict[str, ParamDef]:
+    if kind == "rmsnorm":
+        return {"g": ParamDef((d,), P(None), zero=True)}
+    return {"g": ParamDef((d,), P(None), zero=True),
+            "b": ParamDef((d,), P(None), zero=True)}
+
+
+def apply_norm(kind: str, p, x, use_lut=False):
+    if kind == "rmsnorm":
+        return rmsnorm(x, p["g"], use_lut=use_lut)
+    return layernorm(x, 1.0 + p["g"], p["b"], use_lut=use_lut)
+
+
+# ---------------------------------------------------------------------------
+# Rotary embeddings (standard + M-RoPE for qwen2-vl).
+# ---------------------------------------------------------------------------
+def rope_freqs(dh: int, base: float = 1e6) -> jnp.ndarray:
+    return base ** (-jnp.arange(0, dh // 2, dtype=jnp.float32) / (dh // 2))
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray,
+               base: float = 1e6) -> jnp.ndarray:
+    """x: (..., seq, heads, dh); positions: (..., seq) int."""
+    dh = x.shape[-1]
+    inv = rope_freqs(dh, base)
+    ang = positions[..., None].astype(jnp.float32) * inv   # (..., seq, dh/2)
+    cos = jnp.cos(ang)[..., None, :]
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin],
+                          axis=-1)
+    return out.astype(x.dtype)
+
+
+def apply_mrope(x: jnp.ndarray, positions3: jnp.ndarray,
+                sections: Optional[Tuple[int, int, int]] = None,
+                base: float = 1e6) -> jnp.ndarray:
+    """Qwen2-VL multimodal RoPE: dh/2 frequencies split into (t, h, w)
+    sections, each rotated by its own position stream.
+
+    x: (..., seq, heads, dh); positions3: (3, ..., seq). Default sections
+    use qwen2-vl's 2:3:3 split (16,24,24 at dh=128), scaled to dh.
+    """
+    dh = x.shape[-1]
+    if sections is None:
+        t = dh // 8
+        hw = (dh // 2 - t) // 2
+        sections = (dh // 2 - 2 * hw, hw, hw)
+    inv = rope_freqs(dh, base)                              # (dh/2,)
+    secs = np.cumsum((0,) + tuple(sections))
+    assert secs[-1] == dh // 2, "M-RoPE sections must cover dh/2"
+    parts = []
+    for i in range(3):
+        ang_i = positions3[i][..., None].astype(jnp.float32) * \
+            inv[secs[i]:secs[i + 1]]
+        parts.append(ang_i)
+    ang = jnp.concatenate(parts, axis=-1)                   # (..., seq, dh/2)
+    cos = jnp.cos(ang)[..., None, :]
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin],
+                          axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Attention (GQA, optional local window, optional cross-attention).
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class AttnCfg:
+    d: int
+    heads: int
+    kv_heads: int
+    dh: int
+    qkv_bias: bool = False
+    rope: str = "none"           # none | rope | mrope
+    rope_base: float = 1e6
+    window: int = 0              # 0 = global causal; >0 = sliding window
+    causal: bool = True          # False for encoder self-attention
+    softcap: float = 0.0
+
+
+def attn_defs(cfg: AttnCfg, sh: ShardCfg) -> Dict[str, ParamDef]:
+    tp = sh.tp if cfg.heads % sh.tp_size == 0 and sh.attn_tp else None
+    kv_tp = sh.tp if cfg.kv_heads % sh.tp_size == 0 and sh.attn_tp else None
+    qd, kvd = cfg.heads * cfg.dh, cfg.kv_heads * cfg.dh
+    fs = ShardCfg.fs
+    scale = 1.0 / math.sqrt(cfg.d)
+    defs = {
+        "wq": ParamDef((cfg.d, qd), P(sh.fs(cfg.d), tp), scale),
+        "wk": ParamDef((cfg.d, kvd), P(sh.fs(cfg.d), kv_tp), scale),
+        "wv": ParamDef((cfg.d, kvd), P(sh.fs(cfg.d), kv_tp), scale),
+        "wo": ParamDef((qd, cfg.d), P(tp, sh.fs(cfg.d)), scale),
+    }
+    if cfg.qkv_bias:
+        defs.update({"bq": ParamDef((qd,), P(tp), zero=True),
+                     "bk": ParamDef((kvd,), P(kv_tp), zero=True),
+                     "bv": ParamDef((kvd,), P(kv_tp), zero=True)})
+    return defs
+
+
+def _softmax(scores: jnp.ndarray, use_lut: bool) -> jnp.ndarray:
+    if not use_lut:
+        return jax.nn.softmax(scores, axis=-1)
+    # deployed LUT path (paper §4): clamp IN-RANGE scores to the exp
+    # table's domain, but masked (-inf) positions are exactly zero —
+    # matching the circuit's public-mask semantics (M * e). Clipping the
+    # mask value into the table leaked exp(-4) per masked key.
+    masked = scores < -1e29
+    s = jnp.clip(scores, LUTS.EXP.lo, LUTS.EXP.hi - 2.0 ** -LUTS.EXP.f_in)
+    e = jnp.where(masked, 0.0, LUTS.apply("exp", s))
+    return e / jnp.maximum(jnp.sum(e, axis=-1, keepdims=True), 1e-30)
+
+
+def _banded_attention(cfg: AttnCfg, sh: ShardCfg, q, kq, vq, positions,
+                      use_lut: bool):
+    """Sliding-window attention in banded O(S * 2W) form.
+
+    Queries are chunked by W; chunk i attends keys of chunks (i-1, i) —
+    exact for window <= W. Replaces the dense masked S x S computation
+    (32x fewer score flops/bytes at S=32k, W=512) — §Perf hillclimb B.
+    """
+    B, S, H, dh = q.shape
+    W = cfg.window
+    nc = S // W
+    qc = q.reshape(B, nc, W, H, dh)
+    kpad = jnp.pad(kq, ((0, 0), (W, 0), (0, 0), (0, 0)))
+    vpad = jnp.pad(vq, ((0, 0), (W, 0), (0, 0), (0, 0)))
+    win_idx = (jnp.arange(nc)[:, None] * W +
+               jnp.arange(2 * W)[None, :])                  # (nc, 2W)
+    kc = kpad[:, win_idx]                                   # (B, nc, 2W, H, dh)
+    vc = vpad[:, win_idx]
+    scores = jnp.einsum("bcqhd,bckhd->bchqk", qc, kc) / math.sqrt(dh)
+    if cfg.softcap > 0:
+        scores = cfg.softcap * jnp.tanh(scores / cfg.softcap)
+    q_pos = (jnp.arange(nc)[:, None] * W + jnp.arange(W)[None])  # (nc, W)
+    k_pos = win_idx - W                                     # (nc, 2W)
+    valid = (k_pos[:, None, :] >= 0) & \
+            (k_pos[:, None, :] <= q_pos[:, :, None]) & \
+            (k_pos[:, None, :] > q_pos[:, :, None] - W)
+    scores = jnp.where(valid[None, :, None, :, :],
+                       scores.astype(jnp.float32), -1e30)
+    probs = _softmax(scores, use_lut).astype(q.dtype)
+    out = jnp.einsum("bchqk,bckhd->bcqhd", probs, vc)
+    return out.reshape(B, S, H, dh)
+
+
+def attention(cfg: AttnCfg, sh: ShardCfg, p, x: jnp.ndarray,
+              positions: jnp.ndarray, use_lut: bool = False,
+              kv_cache: Optional[Dict] = None,
+              x_kv: Optional[jnp.ndarray] = None) -> Tuple[jnp.ndarray, Optional[Dict]]:
+    """x: (batch, seq, d). kv_cache: {'k','v','len'} for decode.
+    x_kv: encoder states for cross-attention (whisper decoder)."""
+    B, S, D = x.shape
+    H, KV, dh = cfg.heads, cfg.kv_heads, cfg.dh
+    tp = sh.tp if H % sh.tp_size == 0 and sh.attn_tp else None
+
+    src = x if x_kv is None else x_kv
+    q = jnp.einsum("bsd,dh->bsh", x, p["wq"].astype(x.dtype))
+    k = jnp.einsum("bsd,dh->bsh", src, p["wk"].astype(x.dtype))
+    v = jnp.einsum("bsd,dh->bsh", src, p["wv"].astype(x.dtype))
+    if cfg.qkv_bias:
+        q = q + p["bq"].astype(x.dtype)
+        k = k + p["bk"].astype(x.dtype)
+        v = v + p["bv"].astype(x.dtype)
+    q = q.reshape(B, S, H, dh)
+    k = k.reshape(B, src.shape[1], KV, dh)
+    v = v.reshape(B, src.shape[1], KV, dh)
+    q = cstr(q, P(sh.bdp, None, tp, None))
+    k = cstr(k, P(sh.bdp, None, None, None))
+    v = cstr(v, P(sh.bdp, None, None, None))
+
+    if cfg.rope == "rope":
+        q = apply_rope(q, positions, cfg.rope_base)
+        k = apply_rope(k, positions, cfg.rope_base)
+    elif cfg.rope == "mrope":
+        pos3 = jnp.broadcast_to(positions[None], (3,) + positions.shape)
+        q = apply_mrope(q, pos3, base=cfg.rope_base)
+        k = apply_mrope(k, pos3, base=cfg.rope_base)
+
+    new_cache = None
+    cache_is_ring = False
+    cache_is_seq_sharded = False
+    if kv_cache is not None:
+        # decode: append this step's k/v (ring-buffer if windowed)
+        ck, cv, clen = kv_cache["k"], kv_cache["v"], kv_cache["len"]
+        cap = ck.shape[1]
+        slot = clen % cap if cfg.window > 0 and cap < 10 ** 9 else clen
+        cache_is_ring = cfg.window > 0
+        seq_spec = sh.cache_seq if (sh.cache_seq and
+                                    cap % sh.cache_seq_size == 0) else None
+        cache_is_seq_sharded = seq_spec is not None
+        if S == 1 and seq_spec is not None:
+            # masked-where insert: elementwise on the seq-sharded cache,
+            # so the update stays shard-local (dynamic_update_slice forced
+            # an involuntary full reshard/remat in SPMD) — §Perf
+            # hillclimb C.
+            hit = (jnp.arange(cap)[None, :, None, None] == slot)
+            ck = jnp.where(hit, k, ck)
+            cv = jnp.where(hit, v, cv)
+        else:
+            ck = jax.lax.dynamic_update_slice_in_dim(ck, k, slot, axis=1)
+            cv = jax.lax.dynamic_update_slice_in_dim(cv, v, slot, axis=1)
+        ck = cstr(ck, P(sh.bdp, seq_spec, None, None))
+        cv = cstr(cv, P(sh.bdp, seq_spec, None, None))
+        new_cache = {"k": ck, "v": cv, "len": clen + S}
+        k, v = ck, cv
+
+    group = H // KV
+    kq = jnp.repeat(k, group, axis=2)
+    vq = jnp.repeat(v, group, axis=2)
+
+    if (cfg.window > 0 and kv_cache is None and x_kv is None
+            and cfg.causal and S > 2 * cfg.window
+            and S % cfg.window == 0 and positions.ndim == 1):
+        out = _banded_attention(cfg, sh, q, kq, vq, positions, use_lut)
+        out = out.reshape(B, S, H * dh)
+        out = jnp.einsum("bsh,hd->bsd", out, p["wo"].astype(x.dtype))
+        return cstr(out, P(sh.bdp, None, None)), None
+
+    scores = jnp.einsum("bqhd,bkhd->bhqk", q, kq) / math.sqrt(dh)
+    if cfg.softcap > 0:
+        scores = cfg.softcap * jnp.tanh(scores / cfg.softcap)
+    if kv_cache is not None and cache_is_seq_sharded:
+        # flash-decoding: keep scores sharded along the KEY dim so the
+        # seq-sharded cache is never gathered; softmax denominator and
+        # the output contraction psum instead (§Perf hillclimb C).
+        scores = cstr(scores, P(sh.bdp, None, None, sh.cache_seq))
+    else:
+        scores = cstr(scores, P(sh.bdp, tp, None, None))
+
+    Sk = kq.shape[1]
+    q_pos = positions[..., :, None]                       # (B?, S, 1)
+    k_pos = jnp.arange(Sk)[None, None, :]
+    if kv_cache is not None:
+        k_pos = jnp.broadcast_to(jnp.arange(Sk)[None, :], (B, Sk))[:, None, :]
+    mask = jnp.ones((B, S, Sk), dtype=bool) if x_kv is not None else None
+    if x_kv is None:
+        if positions.ndim == 1:
+            q_pos = positions[None, :, None]
+        if cache_is_ring:
+            # ring cache holds only the window; all filled slots are valid
+            valid = k_pos < jnp.minimum(new_cache["len"], Sk)
+            mask = jnp.broadcast_to(valid, (B, S, Sk)) if valid.shape[0] == 1 \
+                else valid
+        else:
+            mask = k_pos <= q_pos if cfg.causal else jnp.ones(
+                (1, S, Sk), dtype=bool)
+            if cfg.window > 0:
+                mask = jnp.logical_and(mask, k_pos > q_pos - cfg.window)
+            if kv_cache is not None:
+                valid = jnp.arange(Sk)[None, None, :] < new_cache["len"]
+                mask = jnp.logical_and(mask, valid)
+    scores = jnp.where(mask[:, None, :, :] if mask.ndim == 3 else mask,
+                       scores.astype(jnp.float32), -1e30)
+    probs = _softmax(scores, use_lut).astype(x.dtype)
+    out = jnp.einsum("bhqk,bkhd->bqhd", probs, vq)
+    out = out.reshape(B, S, H * dh)
+    out = jnp.einsum("bsh,hd->bsd", out, p["wo"].astype(x.dtype))
+    return cstr(out, P(sh.bdp, None, None)), new_cache
+
+
+def make_kv_cache(cfg: AttnCfg, batch: int, max_len: int,
+                  dtype=DTYPE) -> Dict:
+    cap = min(max_len, cfg.window) if cfg.window > 0 else max_len
+    return {"k": jnp.zeros((batch, cap, cfg.kv_heads, cfg.dh), dtype),
+            "v": jnp.zeros((batch, cap, cfg.kv_heads, cfg.dh), dtype),
+            "len": jnp.array(0, jnp.int32)}
+
+
+# ---------------------------------------------------------------------------
+# MLP (dense + gated) and MoE.
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class MlpCfg:
+    d: int
+    d_ff: int
+    act: str = "gelu"           # gelu | silu
+    gated: bool = False         # llama-style gate+up
+
+
+def mlp_defs(cfg: MlpCfg, sh: ShardCfg) -> Dict[str, ParamDef]:
+    tp = sh.tp if cfg.d_ff % sh.tp_size == 0 else None
+    s_in = 1.0 / math.sqrt(cfg.d)
+    s_out = 1.0 / math.sqrt(cfg.d_ff)
+    defs = {"w1": ParamDef((cfg.d, cfg.d_ff), P(sh.fs(cfg.d), tp), s_in),
+            "w2": ParamDef((cfg.d_ff, cfg.d), P(tp, sh.fs(cfg.d)), s_out)}
+    if cfg.gated:
+        defs["w3"] = ParamDef((cfg.d, cfg.d_ff), P(sh.fs(cfg.d), tp), s_in)
+    return defs
+
+
+def _act(name: str, x: jnp.ndarray, use_lut: bool) -> jnp.ndarray:
+    if use_lut:
+        xc = jnp.clip(x.astype(jnp.float32), LUTS.ALL_SPECS[name].lo,
+                      LUTS.ALL_SPECS[name].hi - 1e-3)
+        return LUTS.apply(name, xc).astype(x.dtype)
+    return jax.nn.gelu(x, approximate=False) if name == "gelu" \
+        else jax.nn.silu(x)
+
+
+def mlp(cfg: MlpCfg, sh: ShardCfg, p, x: jnp.ndarray,
+        use_lut: bool = False) -> jnp.ndarray:
+    h = jnp.einsum("bsd,df->bsf", x, p["w1"].astype(x.dtype))
+    tp = sh.tp if cfg.d_ff % sh.tp_size == 0 else None
+    h = cstr(h, P(sh.dp, None, tp))
+    h = _act(cfg.act, h, use_lut)
+    if cfg.gated:
+        u = jnp.einsum("bsd,df->bsf", x, p["w3"].astype(x.dtype))
+        h = h * u
+    out = jnp.einsum("bsf,fd->bsd", h, p["w2"].astype(x.dtype))
+    return cstr(out, P(sh.dp, None, None))
+
+
+@dataclasses.dataclass(frozen=True)
+class MoeCfg:
+    d: int
+    d_ff: int                  # per-expert hidden
+    n_experts: int
+    top_k: int
+    act: str = "silu"
+    gated: bool = True
+    capacity_factor: float = 1.25
+
+
+def moe_defs(cfg: MoeCfg, sh: ShardCfg) -> Dict[str, ParamDef]:
+    ep = sh.tp if (cfg.n_experts % sh.tp_size == 0 and sh.moe_ep) else None
+    # if experts don't divide tp, TP-shard each expert's d_ff instead
+    ff_tp = None if ep else (sh.tp if cfg.d_ff % sh.tp_size == 0 else None)
+    s_in = 1.0 / math.sqrt(cfg.d)
+    s_out = 1.0 / math.sqrt(cfg.d_ff)
+    defs = {
+        "router": ParamDef((cfg.d, cfg.n_experts), P(None, None), s_in),
+        "w1": ParamDef((cfg.n_experts, cfg.d, cfg.d_ff),
+                       P(ep, None, ff_tp), s_in),
+        "w2": ParamDef((cfg.n_experts, cfg.d_ff, cfg.d),
+                       P(ep, ff_tp, None), s_out),
+    }
+    if cfg.gated:
+        defs["w3"] = ParamDef((cfg.n_experts, cfg.d, cfg.d_ff),
+                              P(ep, None, ff_tp), s_in)
+    return defs
+
+
+def moe(cfg: MoeCfg, sh: ShardCfg, p, x: jnp.ndarray,
+        use_lut: bool = False, dispatch: str = "sort"
+        ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Capacity-based MoE. Returns (out, aux_loss).
+
+    dispatch='sort' (default): sort-based gather/scatter routing — the
+    (token, k) assignments are sorted by expert, ranked within expert for
+    capacity, and tokens are GATHERED into (E, C, d); combine is a
+    scatter-add. Cost is O(T log T + E C d ff). This replaced the GShard
+    one-hot einsum dispatch ('einsum'), whose (T x E x C) dispatch tensors
+    dominated the compute roofline at grok/jamba scale — §Perf hillclimb A
+    (hypothesis confirmed: dispatch flops >> expert flops).
+
+    Token and expert dims carry sharding constraints; resharding between
+    token-sharded activations and expert-sharded FFN inputs lowers to
+    all-to-all on the mesh (EP). Router runs in fp32.
+    """
+    B, S, D = x.shape
+    E, K = cfg.n_experts, cfg.top_k
+    T = B * S
+    xt = x.reshape(T, D)
+    logits = jnp.einsum("td,de->te", xt.astype(jnp.float32),
+                        p["router"].astype(jnp.float32))
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, idx = jax.lax.top_k(probs, K)               # (T, K)
+    gate_vals = gate_vals / jnp.sum(gate_vals, -1, keepdims=True)
+    cap = max(int(math.ceil(cfg.capacity_factor * K * T / E)), 4)
+    cap = min(cap, T * K)
+    ep = sh.tp if (E % sh.tp_size == 0 and sh.moe_ep) else None
+    # aux loss (Switch): E * sum_e f_e p_e
+    onehot_f = jax.nn.one_hot(idx, E, dtype=jnp.float32)
+    aux = E * jnp.sum(jnp.mean(onehot_f.sum(1), 0) * jnp.mean(probs, 0))
+
+    if dispatch == "einsum":
+        pos = jnp.cumsum(onehot_f.reshape(T * K, E), axis=0
+                         ).reshape(T, K, E)
+        pos = (pos - 1.0) * onehot_f
+        keep = (pos < cap) & (onehot_f > 0)
+        slot = jnp.where(keep, pos, 0).astype(jnp.int32)
+        slot_oh = jax.nn.one_hot(slot, cap, dtype=x.dtype) * \
+            keep.astype(x.dtype)[..., None]
+        disp = jnp.einsum("tkec->tec", slot_oh)
+        comb = jnp.einsum("tkec,tk->tec", slot_oh,
+                          gate_vals.astype(x.dtype))
+        xe = jnp.einsum("td,tec->ecd", xt, disp)
+        xe = cstr(xe, P(ep, None, None))
+        ye = _expert_ffn(cfg, p, xe, use_lut)
+        ye = cstr(ye, P(ep, None, None))
+        out = jnp.einsum("ecd,tec->td", ye, comb)
+        return cstr(out.reshape(B, S, D), P(sh.dp, None, None)), aux
+
+    # sort-based dispatch
+    flat_e = idx.reshape(-1)                               # (T*K,)
+    order = jnp.argsort(flat_e)                            # stable
+    sorted_e = flat_e[order]
+    tok_of = order // K
+    starts = jnp.searchsorted(sorted_e, jnp.arange(E))
+    rank = jnp.arange(T * K) - starts[sorted_e]
+    keep = rank < cap
+    slot = jnp.where(keep, rank, 0)
+    dest = sorted_e * cap + slot                           # unique where keep
+    src = xt[tok_of] * keep[:, None].astype(x.dtype)
+    xe = jnp.zeros((E * cap, D), x.dtype).at[dest].add(
+        jnp.where(keep[:, None], src, 0))
+    xe = cstr(xe.reshape(E, cap, D), P(ep, None, None))
+    ye = _expert_ffn(cfg, p, xe, use_lut)
+    ye = cstr(ye, P(ep, None, None)).reshape(E * cap, D)
+    contrib = ye[dest] * (gate_vals.reshape(-1)[order] *
+                          keep).astype(x.dtype)[:, None]
+    out = jnp.zeros((T, D), x.dtype).at[tok_of].add(contrib)
+    return cstr(out.reshape(B, S, D), P(sh.dp, None, None)), aux
+
+
+def _expert_ffn(cfg: MoeCfg, p, xe: jnp.ndarray, use_lut: bool
+                ) -> jnp.ndarray:
+    h = jnp.einsum("ecd,edf->ecf", xe, p["w1"].astype(xe.dtype))
+    h = _act(cfg.act, h, use_lut)
+    if cfg.gated:
+        h = h * jnp.einsum("ecd,edf->ecf", xe, p["w3"].astype(xe.dtype))
+    return jnp.einsum("ecf,efd->ecd", h, p["w2"].astype(xe.dtype))

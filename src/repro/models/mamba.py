@@ -1,0 +1,157 @@
+"""Mamba (S6) selective-state-space block for the jamba hybrid.
+
+TPU mapping: the selective scan runs chunked — jax.lax.scan over sequence
+chunks carrying the (d_inner, d_state) state, with a parallel associative
+scan inside each chunk. d_inner is TP-sharded over the "model" axis, so
+per-device chunk state stays VMEM-sized. Decode is a single fused state
+update (cache = the SSM state + conv tail).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from .layers import ParamDef, ShardCfg, cstr
+
+CHUNK = 256
+
+
+@dataclasses.dataclass(frozen=True)
+class MambaCfg:
+    d: int
+    d_inner: int                 # typically 2*d
+    d_state: int = 16
+    d_conv: int = 4
+    dt_rank: int = 0             # 0 -> ceil(d/16)
+
+    @property
+    def rank(self) -> int:
+        return self.dt_rank or -(-self.d // 16)
+
+
+def mamba_defs(cfg: MambaCfg, sh: ShardCfg) -> Dict[str, ParamDef]:
+    tp = sh.tp if cfg.d_inner % sh.tp_size == 0 else None
+    s = 1.0 / math.sqrt(cfg.d)
+    si = 1.0 / math.sqrt(cfg.d_inner)
+    return {
+        "in_proj": ParamDef((cfg.d, 2 * cfg.d_inner),
+                            P(sh.fs(cfg.d), tp), s),
+        "conv_w": ParamDef((cfg.d_conv, cfg.d_inner), P(None, tp), 0.2),
+        "conv_b": ParamDef((cfg.d_inner,), P(tp), zero=True),
+        "x_proj": ParamDef((cfg.d_inner, cfg.rank + 2 * cfg.d_state),
+                           P(tp, None), si),
+        "dt_proj": ParamDef((cfg.rank, cfg.d_inner), P(None, tp), 0.1),
+        "dt_bias": ParamDef((cfg.d_inner,), P(tp), zero=True),
+        "A_log": ParamDef((cfg.d_inner, cfg.d_state), P(tp, None), 0.5),
+        "D": ParamDef((cfg.d_inner,), P(tp), zero=True),
+        "out_proj": ParamDef((cfg.d_inner, cfg.d),
+                             P(tp, sh.fs(cfg.d)), si),
+    }
+
+
+def _ssm_chunk(carry, inp):
+    """One chunk of the selective scan via associative scan.
+
+    carry: h (B, dI, dS). inp: (a, bx, c) with
+      a  (B, L, dI, dS) = exp(dt*A),  bx (B, L, dI, dS) = dt*B*x,
+      c  (B, L, dS).
+    """
+    h0, = carry
+    a, bx, c = inp
+
+    def comb(l, r):
+        return (l[0] * r[0], l[1] * r[0] + r[1])
+    a_cum, h_in = jax.lax.associative_scan(comb, (a, bx), axis=1)
+    h_all = h_in + a_cum * h0[:, None]
+    y = jnp.einsum("blds,bls->bld", h_all, c)
+    return (h_all[:, -1],), y
+
+
+def selective_scan(x: jnp.ndarray, dt: jnp.ndarray, A: jnp.ndarray,
+                   Bc: jnp.ndarray, Cc: jnp.ndarray,
+                   h0: Optional[jnp.ndarray] = None
+                   ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """x, dt: (B, S, dI); A: (dI, dS); Bc, Cc: (B, S, dS).
+
+    Returns (y (B,S,dI), h_final (B,dI,dS)). S padded to CHUNK multiple.
+    """
+    Bn, S, dI = x.shape
+    dS = A.shape[-1]
+    if h0 is None:
+        h0 = jnp.zeros((Bn, dI, dS), x.dtype)
+    L = min(CHUNK, S)
+    assert S % L == 0
+    a = jnp.exp(dt[..., None] * A[None, None])             # (B,S,dI,dS)
+    bx = (dt * x)[..., None] * Bc[:, :, None, :]
+    ar = a.reshape(Bn, S // L, L, dI, dS).swapaxes(0, 1)
+    bxr = bx.reshape(Bn, S // L, L, dI, dS).swapaxes(0, 1)
+    cr = Cc.reshape(Bn, S // L, L, dS).swapaxes(0, 1)
+    (hf,), ys = jax.lax.scan(_ssm_chunk, (h0,), (ar, bxr, cr))
+    y = ys.swapaxes(0, 1).reshape(Bn, S, dI)
+    return y, hf
+
+
+def mamba(cfg: MambaCfg, sh: ShardCfg, p, x: jnp.ndarray,
+          cache: Optional[Dict] = None
+          ) -> Tuple[jnp.ndarray, Optional[Dict]]:
+    """x: (B, S, d). cache (decode): {'h': (B,dI,dS), 'conv': (B,d_conv-1,dI)}."""
+    Bn, S, D = x.shape
+    dI, dS, dC = cfg.d_inner, cfg.d_state, cfg.d_conv
+    tp = sh.tp if dI % sh.tp_size == 0 else None
+    xz = jnp.einsum("bsd,de->bse", x, p["in_proj"].astype(x.dtype))
+    xz = cstr(xz, P(sh.dp, None, tp))
+    xi, z = jnp.split(xz, 2, axis=-1)
+
+    # causal depthwise conv along seq
+    if cache is not None:
+        tail = cache["conv"]                               # (B, dC-1, dI)
+        xin = jnp.concatenate([tail, xi], axis=1)
+        new_tail = xin[:, -(dC - 1):, :]
+    else:
+        xin = jnp.pad(xi, ((0, 0), (dC - 1, 0), (0, 0)))
+        new_tail = xin[:, -(dC - 1):, :]
+    xc = sum(xin[:, i:i + S, :] * p["conv_w"][i].astype(x.dtype)
+             for i in range(dC)) + p["conv_b"].astype(x.dtype)
+    xc = jax.nn.silu(xc)
+
+    proj = jnp.einsum("bsi,ir->bsr", xc, p["x_proj"].astype(x.dtype))
+    dt_in, Bc, Cc = jnp.split(
+        proj, [cfg.rank, cfg.rank + dS], axis=-1)
+    dt = jax.nn.softplus(
+        jnp.einsum("bsr,ri->bsi", dt_in, p["dt_proj"].astype(x.dtype))
+        + p["dt_bias"].astype(x.dtype))
+    A = -jnp.exp(p["A_log"].astype(jnp.float32)).astype(x.dtype)
+
+    if cache is not None and S == 1:
+        # fused single-step update
+        h0 = cache["h"]
+        a = jnp.exp(dt[:, 0, :, None] * A[None])
+        h = a * h0 + (dt[:, 0] * xc[:, 0])[..., None] * Bc[:, 0, None, :]
+        y = jnp.einsum("bds,bs->bd", h, Cc[:, 0])[:, None, :]
+        new_cache = {"h": h, "conv": new_tail}
+    else:
+        pad = (-S) % min(CHUNK, max(S, 1))
+        if pad:
+            xc2 = jnp.pad(xc, ((0, 0), (0, pad), (0, 0)))
+            dt2 = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+            Bc2 = jnp.pad(Bc, ((0, 0), (0, pad), (0, 0)))
+            Cc2 = jnp.pad(Cc, ((0, 0), (0, pad), (0, 0)))
+        else:
+            xc2, dt2, Bc2, Cc2 = xc, dt, Bc, Cc
+        y, hf = selective_scan(xc2, dt2, A, Bc2, Cc2)
+        y = y[:, :S]
+        new_cache = {"h": hf, "conv": new_tail} if cache is not None else None
+    y = y + xc * p["D"].astype(x.dtype)
+    y = y * jax.nn.silu(z)
+    out = jnp.einsum("bsi,id->bsd", y, p["out_proj"].astype(x.dtype))
+    return cstr(out, P(sh.dp, None, None)), new_cache
+
+
+def make_mamba_cache(cfg: MambaCfg, batch: int, dtype=jnp.bfloat16) -> Dict:
+    return {"h": jnp.zeros((batch, cfg.d_inner, cfg.d_state), dtype),
+            "conv": jnp.zeros((batch, cfg.d_conv - 1, cfg.d_inner), dtype)}

@@ -1,0 +1,456 @@
+"""Unified model assembly for all assigned architectures.
+
+A ModelCfg is a per-layer program (attn / mamba / mlstm / slstm mixers,
+dense-MLP or MoE FFNs, optional encoder stack for enc-dec). One forward
+covers training, prefill and decode; caches are pytrees matching the layer
+program. Sharding comes from layers.ShardCfg; parameters carry
+PartitionSpecs so pjit can consume `param_specs(model.defs())` directly.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from . import layers as L
+from . import mamba as M
+from . import xlstm as X
+
+
+@dataclasses.dataclass(frozen=True)
+class LayerSpec:
+    kind: str = "attn"            # attn | mamba | mlstm | slstm
+    window: int = 0               # sliding window size (attn only)
+    rope_base: float = 1e6
+    moe: bool = False
+
+
+@dataclasses.dataclass(frozen=True)
+class EncoderCfg:
+    n_layers: int
+    frames: int = 1500            # whisper stub frontend length
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelCfg:
+    name: str
+    d: int
+    n_layers: int
+    heads: int
+    kv_heads: int
+    dh: int
+    d_ff: int
+    vocab: int
+    layers: Tuple[LayerSpec, ...]
+    norm: str = "rmsnorm"
+    act: str = "silu"
+    gated_mlp: bool = True
+    qkv_bias: bool = False
+    rope: str = "rope"            # none | rope | mrope
+    softcap: float = 0.0
+    n_experts: int = 0
+    top_k: int = 0
+    moe_ff: int = 0               # per-expert hidden (defaults d_ff)
+    moe_dispatch: str = "sort"    # 'sort' | 'einsum' (§Perf hillclimb A)
+    tie_embeddings: bool = False
+    pos_embed: int = 0            # learned absolute positions (gpt2/whisper)
+    encoder: Optional[EncoderCfg] = None
+    max_seq: int = 131072
+    attn_tp: bool = True
+    dtype: Any = jnp.bfloat16
+
+    @property
+    def vocab_padded(self) -> int:
+        return ((self.vocab + 255) // 256) * 256
+
+    def attn_cfg(self, spec: LayerSpec, causal=True) -> L.AttnCfg:
+        return L.AttnCfg(d=self.d, heads=self.heads, kv_heads=self.kv_heads,
+                         dh=self.dh, qkv_bias=self.qkv_bias,
+                         rope=self.rope, rope_base=spec.rope_base,
+                         window=spec.window, causal=causal,
+                         softcap=self.softcap)
+
+    def mlp_cfg(self) -> L.MlpCfg:
+        return L.MlpCfg(d=self.d, d_ff=self.d_ff, act=self.act,
+                        gated=self.gated_mlp)
+
+    def moe_cfg(self) -> L.MoeCfg:
+        return L.MoeCfg(d=self.d, d_ff=self.moe_ff or self.d_ff,
+                        n_experts=self.n_experts, top_k=self.top_k,
+                        act=self.act, gated=self.gated_mlp)
+
+    def mamba_cfg(self) -> M.MambaCfg:
+        return M.MambaCfg(d=self.d, d_inner=2 * self.d)
+
+    def xlstm_cfg(self, kind: str) -> X.XlstmCfg:
+        return X.XlstmCfg(d=self.d, heads=self.heads, kind=kind)
+
+    def shard_cfg(self, dp: Tuple[str, ...] = ("data",), tp_size: int = 16,
+                  dp_size: int = 16, cache_seq: Tuple[str, ...] = (),
+                  cache_seq_size: int = 1, batch_dp: bool = True
+                  ) -> L.ShardCfg:
+        return L.ShardCfg(dp=dp, tp_size=tp_size, dp_size=dp_size,
+                          cache_seq=cache_seq,
+                          cache_seq_size=cache_seq_size, batch_dp=batch_dp,
+                          attn_tp=self.attn_tp and
+                          (self.heads % tp_size == 0))
+
+
+# ---------------------------------------------------------------------------
+# Parameter definitions.
+# ---------------------------------------------------------------------------
+def _layer_defs(cfg: ModelCfg, spec: LayerSpec, sh: L.ShardCfg,
+                cross: bool = False, causal: bool = True) -> Dict:
+    d = {}
+    d["n1"] = L.norm_defs(cfg.norm, cfg.d)
+    if spec.kind == "attn":
+        d["mix"] = L.attn_defs(cfg.attn_cfg(spec, causal), sh)
+    elif spec.kind == "mamba":
+        d["mix"] = M.mamba_defs(cfg.mamba_cfg(), sh)
+    else:
+        d["mix"] = X.xlstm_defs(cfg.xlstm_cfg(spec.kind), sh)
+    if cross:
+        d["nc"] = L.norm_defs(cfg.norm, cfg.d)
+        cross_spec = dataclasses.replace(spec, rope_base=spec.rope_base)
+        ccfg = dataclasses.replace(cfg.attn_cfg(cross_spec, causal=False),
+                                   rope="none")
+        d["cross"] = L.attn_defs(ccfg, sh)
+    if cfg.d_ff > 0 or spec.moe:
+        d["n2"] = L.norm_defs(cfg.norm, cfg.d)
+        if spec.moe:
+            d["ffn"] = L.moe_defs(cfg.moe_cfg(), sh)
+        else:
+            d["ffn"] = L.mlp_defs(cfg.mlp_cfg(), sh)
+    return d
+
+
+def model_defs(cfg: ModelCfg, sh: L.ShardCfg) -> Dict:
+    V = cfg.vocab_padded
+    tp = sh.tp if V % sh.tp_size == 0 else None
+    defs: Dict[str, Any] = {
+        "embed": L.ParamDef((V, cfg.d), P(tp, sh.fs(cfg.d)), 0.02),
+        "layers": [_layer_defs(cfg, spec, sh) for spec in cfg.layers],
+        "final_norm": L.norm_defs(cfg.norm, cfg.d),
+    }
+    if not cfg.tie_embeddings:
+        defs["lm_head"] = L.ParamDef((cfg.d, V), P(sh.fs(cfg.d), tp),
+                                     1.0 / math.sqrt(cfg.d))
+    if cfg.pos_embed:
+        defs["pos"] = L.ParamDef((cfg.pos_embed, cfg.d), P(None, None), 0.01)
+    if cfg.encoder is not None:
+        enc_spec = LayerSpec(kind="attn", rope_base=0.0)
+        defs["enc_layers"] = [
+            _layer_defs(dataclasses.replace(cfg, rope="none", qkv_bias=True),
+                        enc_spec, sh, causal=False)
+            for _ in range(cfg.encoder.n_layers)]
+        defs["enc_norm"] = L.norm_defs(cfg.norm, cfg.d)
+        defs["enc_pos"] = L.ParamDef((cfg.encoder.frames, cfg.d),
+                                     P(None, None), 0.01)
+        defs["dec_layers_cross"] = None  # marker; decoder layers get cross
+    return defs
+
+
+def init(cfg: ModelCfg, sh: L.ShardCfg, rng: jax.Array,
+         scan_layers: bool = False):
+    return L.init_params(_fix_defs(cfg, sh, scan_layers), rng)
+
+
+def scan_split(cfg: ModelCfg) -> Tuple[int, int]:
+    """(period, reps): layers [0, period*reps) are scanned (period-stacked),
+    the rest run as an explicit tail. Picks the smallest period whose
+    pattern repeats >= 2 times — one compiled body instead of n_layers
+    (MaxText-style scan-over-layers; §Perf compile-time iteration)."""
+    specs_ = cfg.layers
+    n = len(specs_)
+    best = (n, 1)                      # no scan
+    for p in range(1, n // 2 + 1):
+        k = n // p
+        if k < 2:
+            break
+        if all(specs_[i] == specs_[i % p] for i in range(k * p)):
+            if p + (n - k * p) < best[0] + (n - best[0] * best[1]):
+                best = (p, k)
+    return best
+
+
+def _stack_defs(defs_list):
+    """Stack identical per-layer def trees along a new leading axis."""
+    def stack(*ds):
+        d0 = ds[0]
+        from jax.sharding import PartitionSpec
+        return L.ParamDef(shape=(len(ds),) + tuple(d0.shape),
+                          spec=PartitionSpec(None, *d0.spec),
+                          init_scale=d0.init_scale, dtype=d0.dtype,
+                          zero=d0.zero)
+    return jax.tree_util.tree_map(
+        stack, *defs_list, is_leaf=lambda x: isinstance(x, L.ParamDef))
+
+
+def _fix_defs(cfg: ModelCfg, sh: L.ShardCfg, scan_layers: bool = False):
+    defs = model_defs(cfg, sh)
+    if cfg.encoder is not None:
+        # decoder layers need cross-attention blocks
+        defs["layers"] = [
+            _layer_defs(dataclasses.replace(cfg, rope="none"), spec, sh,
+                        cross=True)
+            for spec in cfg.layers]
+        defs.pop("dec_layers_cross", None)
+    if scan_layers:
+        p, k = scan_split(cfg)
+        per_layer = defs.pop("layers")
+        defs["blocks"] = {
+            f"pos{j}": _stack_defs([per_layer[r * p + j] for r in range(k)])
+            for j in range(p)}
+        defs["tail"] = per_layer[p * k:]
+        if cfg.encoder is not None:
+            enc = defs.pop("enc_layers")
+            defs["enc_blocks"] = _stack_defs(enc)
+            defs["enc_tail"] = []
+    return defs
+
+
+def specs(cfg: ModelCfg, sh: L.ShardCfg, scan_layers: bool = False):
+    return L.param_specs(_fix_defs(cfg, sh, scan_layers))
+
+
+def shapes(cfg: ModelCfg, sh: L.ShardCfg, scan_layers: bool = False):
+    return L.param_shapes(_fix_defs(cfg, sh, scan_layers))
+
+
+# ---------------------------------------------------------------------------
+# Forward.
+# ---------------------------------------------------------------------------
+def _mixer(cfg: ModelCfg, spec: LayerSpec, sh: L.ShardCfg, lp, h,
+           positions, use_lut, cache, enc_out):
+    if spec.kind == "attn":
+        out, new_cache = L.attention(cfg.attn_cfg(spec), sh, lp["mix"],
+                                     h, positions, use_lut, cache)
+    elif spec.kind == "mamba":
+        out, new_cache = M.mamba(cfg.mamba_cfg(), sh, lp["mix"], h, cache)
+    elif spec.kind == "mlstm":
+        out, new_cache = X.mlstm(cfg.xlstm_cfg("mlstm"), sh, lp["mix"], h,
+                                 cache)
+    else:
+        out, new_cache = X.slstm(cfg.xlstm_cfg("slstm"), sh, lp["mix"], h,
+                                 cache)
+    return out, new_cache
+
+
+def forward(cfg: ModelCfg, sh: L.ShardCfg, params, tokens: jnp.ndarray,
+            positions: Optional[jnp.ndarray] = None,
+            caches: Optional[List] = None, use_lut: bool = False,
+            enc_input: Optional[jnp.ndarray] = None,
+            remat: bool = False
+            ) -> Tuple[jnp.ndarray, Optional[List], jnp.ndarray]:
+    """tokens: (B, S) int32 -> logits (B, S, vocab_padded).
+
+    Returns (logits, new_caches, aux_loss). enc_input: (B, frames, d)
+    precomputed modality embeddings (whisper/vlm stub frontends).
+    """
+    B, S = tokens.shape
+    if positions is None:
+        positions = jnp.arange(S)
+        if caches is not None and cfg.layers[0].kind == "attn":
+            pass
+    h = params["embed"].astype(cfg.dtype)[tokens]
+    h = L.cstr(h, P(sh.dp, None, None))
+    if cfg.pos_embed:
+        pos_table = params["pos"].astype(cfg.dtype)
+        h = h + pos_table[jnp.clip(positions, 0, cfg.pos_embed - 1)]
+
+    enc_out = None
+    if cfg.encoder is not None and enc_input is not None:
+        e = enc_input.astype(cfg.dtype) + params["enc_pos"].astype(cfg.dtype)
+        enc_positions = jnp.arange(e.shape[1])
+        ecfg_base = dataclasses.replace(cfg, rope="none", qkv_bias=True)
+
+        def enc_body(e, lp):
+            spec = LayerSpec(kind="attn")
+            a, _ = L.attention(
+                ecfg_base.attn_cfg(spec, causal=False), sh, lp["mix"],
+                L.apply_norm(cfg.norm, lp["n1"], e, use_lut),
+                enc_positions, use_lut)
+            e = e + a
+            f = L.mlp(cfg.mlp_cfg(), sh,
+                      lp["ffn"], L.apply_norm(cfg.norm, lp["n2"], e,
+                                              use_lut), use_lut)
+            return e + f, None
+
+        if "enc_blocks" in params:
+            e, _ = jax.lax.scan(enc_body, e, params["enc_blocks"])
+        else:
+            for lp in params["enc_layers"]:
+                e, _ = enc_body(e, lp)
+        enc_out = L.apply_norm(cfg.norm, params["enc_norm"], e, use_lut)
+
+    aux_total = jnp.zeros((), jnp.float32)
+    new_caches: List = [] if caches is not None else None
+
+    def layer_body(h, lp, spec, cache):
+        aux = jnp.zeros((), jnp.float32)
+        hn = L.apply_norm(cfg.norm, lp["n1"], h, use_lut)
+        out, new_cache = _mixer(cfg, spec, sh, lp, hn, positions, use_lut,
+                                cache, enc_out)
+        h = h + out
+        if "cross" in lp and enc_out is not None:
+            hc = L.apply_norm(cfg.norm, lp["nc"], h, use_lut)
+            c_spec = dataclasses.replace(cfg.attn_cfg(spec, causal=False),
+                                         rope="none")
+            ca, _ = L.attention(c_spec, sh, lp["cross"], hc, positions,
+                                use_lut, None, x_kv=enc_out)
+            h = h + ca
+        if "ffn" in lp:
+            hf = L.apply_norm(cfg.norm, lp["n2"], h, use_lut)
+            if spec.moe:
+                f, aux = L.moe(cfg.moe_cfg(), sh, lp["ffn"], hf, use_lut,
+                               dispatch=cfg.moe_dispatch)
+            else:
+                f = L.mlp(cfg.mlp_cfg(), sh, lp["ffn"], hf, use_lut)
+            h = h + f
+        return h, new_cache, aux
+
+    body = layer_body
+    if remat:
+        body = jax.checkpoint(layer_body, static_argnums=(2,),
+                              policy=jax.checkpoint_policies.nothing_saveable)
+
+    if "blocks" in params:
+        # scan-over-layers: one compiled body per period position
+        p, k = scan_split(cfg)
+
+        def period_body(h, xs):
+            aux_sum = jnp.zeros((), jnp.float32)
+            out_caches = {}
+            for j in range(p):
+                lp = xs["params"][f"pos{j}"]
+                cache = xs["caches"][f"pos{j}"] if caches is not None \
+                    else None
+                h, nc, aux = body(h, lp, cfg.layers[j], cache)
+                aux_sum = aux_sum + aux
+                if caches is not None:
+                    out_caches[f"pos{j}"] = nc
+            return h, {"aux": aux_sum, "caches": out_caches}
+
+        xs = {"params": params["blocks"]}
+        if caches is not None:
+            xs["caches"] = caches["blocks"]
+        h, ys = jax.lax.scan(period_body, h, xs)
+        aux_total = aux_total + jnp.sum(ys["aux"])
+        new_caches = {"blocks": ys["caches"], "tail": []} \
+            if caches is not None else None
+        for j, lp in enumerate(params["tail"]):
+            spec = cfg.layers[p * k + j]
+            cache = caches["tail"][j] if caches is not None else None
+            h, nc, aux = body(h, lp, spec, cache)
+            aux_total = aux_total + aux
+            if caches is not None:
+                new_caches["tail"].append(nc)
+    else:
+        for i, (lp, spec) in enumerate(zip(params["layers"], cfg.layers)):
+            cache = caches[i] if caches is not None else None
+            h, new_cache, aux = body(h, lp, spec, cache)
+            aux_total = aux_total + aux
+            if new_caches is not None:
+                new_caches.append(new_cache)
+
+    h = L.apply_norm(cfg.norm, params["final_norm"], h, use_lut)
+    head = (params["embed"].T if cfg.tie_embeddings
+            else params["lm_head"]).astype(cfg.dtype)
+    logits = jnp.einsum("bsd,dv->bsv", h, head)
+    tp = sh.tp if cfg.vocab_padded % sh.tp_size == 0 else None
+    logits = L.cstr(logits, P(sh.dp, None, tp))
+    return logits, new_caches, aux_total
+
+
+# ---------------------------------------------------------------------------
+# Losses / steps.
+# ---------------------------------------------------------------------------
+def loss_fn(cfg: ModelCfg, sh: L.ShardCfg, params, tokens, labels,
+            enc_input=None, use_lut: bool = False, remat: bool = True
+            ) -> jnp.ndarray:
+    logits, _, aux = forward(cfg, sh, params, tokens, enc_input=enc_input,
+                             use_lut=use_lut, remat=remat)
+    logits = logits.astype(jnp.float32)
+    logz = jax.scipy.special.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    mask = labels >= 0
+    nll = jnp.sum((logz - ll) * mask) / jnp.maximum(mask.sum(), 1)
+    return nll + 0.01 * aux
+
+
+def _one_cache(cfg: ModelCfg, spec: LayerSpec, batch: int, max_len: int):
+    if spec.kind == "attn":
+        return L.make_kv_cache(cfg.attn_cfg(spec), batch, max_len,
+                               cfg.dtype)
+    if spec.kind == "mamba":
+        return M.make_mamba_cache(cfg.mamba_cfg(), batch, cfg.dtype)
+    return X.make_xlstm_cache(cfg.xlstm_cfg(spec.kind), batch)
+
+
+def make_caches(cfg: ModelCfg, sh: L.ShardCfg, batch: int, max_len: int,
+                scan_layers: bool = False):
+    if not scan_layers:
+        return [_one_cache(cfg, spec, batch, max_len)
+                for spec in cfg.layers]
+    p, k = scan_split(cfg)
+    blocks = {}
+    for j in range(p):
+        one = _one_cache(cfg, cfg.layers[j], batch, max_len)
+        blocks[f"pos{j}"] = jax.tree_util.tree_map(
+            lambda x: jnp.broadcast_to(x[None], (k,) + x.shape), one)
+    tail = [_one_cache(cfg, cfg.layers[p * k + j], batch, max_len)
+            for j in range(len(cfg.layers) - p * k)]
+    return {"blocks": blocks, "tail": tail}
+
+
+def _one_cache_spec(cfg: ModelCfg, spec: LayerSpec, sh: L.ShardCfg):
+    from jax.sharding import PartitionSpec as P
+    tp = sh.tp
+    if spec.kind == "attn":
+        cap_axes = sh.cache_seq if sh.cache_seq else None
+        kv_tp = tp if (cfg.kv_heads % sh.tp_size == 0 and sh.attn_tp and
+                       not cap_axes) else None
+        return {"k": P(sh.bdp, cap_axes, kv_tp, None),
+                "v": P(sh.bdp, cap_axes, kv_tp, None), "len": P()}
+    if spec.kind == "mamba":
+        mc = cfg.mamba_cfg()
+        itp = tp if mc.d_inner % sh.tp_size == 0 else None
+        return {"h": P(sh.bdp, itp, None), "conv": P(sh.bdp, None, itp)}
+    xc = cfg.xlstm_cfg(spec.kind)
+    htp = tp if xc.heads % sh.tp_size == 0 else None
+    if spec.kind == "mlstm":
+        return {"C": P(sh.bdp, htp, None, None), "n": P(sh.bdp, htp, None),
+                "m": P(sh.bdp, htp)}
+    return {"c": P(sh.bdp, htp, None), "n": P(sh.bdp, htp, None),
+            "h": P(sh.bdp, htp, None), "m": P(sh.bdp, htp, None)}
+
+
+def cache_specs(cfg: ModelCfg, sh: L.ShardCfg, scan_layers: bool = False):
+    from jax.sharding import PartitionSpec as P
+    if not scan_layers:
+        return [_one_cache_spec(cfg, spec, sh) for spec in cfg.layers]
+    p, k = scan_split(cfg)
+    blocks = {}
+    for j in range(p):
+        one = _one_cache_spec(cfg, cfg.layers[j], sh)
+        blocks[f"pos{j}"] = jax.tree_util.tree_map(
+            lambda s: P(None, *s), one,
+            is_leaf=lambda s: isinstance(s, P))
+    tail = [_one_cache_spec(cfg, cfg.layers[p * k + j], sh)
+            for j in range(len(cfg.layers) - p * k)]
+    return {"blocks": blocks, "tail": tail}
+
+
+def decode_step(cfg: ModelCfg, sh: L.ShardCfg, params, token, pos, caches,
+                enc_input=None, use_lut: bool = False):
+    """token: (B, 1); pos: (B,) current positions. One serve_step."""
+    positions = pos[:, None]
+    logits, new_caches, _ = forward(cfg, sh, params, token,
+                                    positions=positions, caches=caches,
+                                    enc_input=enc_input, use_lut=use_lut)
+    return logits[:, -1], new_caches

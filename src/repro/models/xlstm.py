@@ -1,0 +1,215 @@
+"""xLSTM blocks (arXiv:2405.04517): mLSTM (matrix memory) + sLSTM.
+
+TPU mapping: mLSTM runs in chunked-parallel form — lax.scan over sequence
+chunks carrying the (dh x dh) matrix memory; inside a chunk the outer
+products batch into matmuls (MXU shape). The exponential input gate and
+sigmoid forget gate use the LUT machinery on the provable path. sLSTM is
+inherently recurrent (hidden-to-hidden R per head) and runs as a
+lax.scan over tokens — it is the memory-light minority block (1:7).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from .layers import ParamDef, ShardCfg, cstr
+
+CHUNK = 128
+
+
+@dataclasses.dataclass(frozen=True)
+class XlstmCfg:
+    d: int
+    heads: int
+    kind: str = "mlstm"          # mlstm | slstm
+
+    @property
+    def dh(self) -> int:
+        return self.d // self.heads
+
+
+def xlstm_defs(cfg: XlstmCfg, sh: ShardCfg) -> Dict[str, ParamDef]:
+    tp = sh.tp if cfg.heads % sh.tp_size == 0 else None
+    s = 1.0 / math.sqrt(cfg.d)
+    if cfg.kind == "mlstm":
+        return {
+            "wq": ParamDef((cfg.d, cfg.d), P(sh.fs(cfg.d), tp), s),
+            "wk": ParamDef((cfg.d, cfg.d), P(sh.fs(cfg.d), tp), s),
+            "wv": ParamDef((cfg.d, cfg.d), P(sh.fs(cfg.d), tp), s),
+            "wi": ParamDef((cfg.d, cfg.heads), P(sh.fs(cfg.d), tp), s),
+            "wf": ParamDef((cfg.d, cfg.heads), P(sh.fs(cfg.d), tp), s),
+            "bf": ParamDef((cfg.heads,), P(tp), zero=True),
+            "wo": ParamDef((cfg.d, cfg.d), P(tp, sh.fs(cfg.d)), s),
+            "ogate": ParamDef((cfg.d, cfg.d), P(sh.fs(cfg.d), tp), s),
+        }
+    return {
+        "wz": ParamDef((cfg.d, cfg.d), P(sh.fs(cfg.d), tp), s),
+        "wi": ParamDef((cfg.d, cfg.d), P(sh.fs(cfg.d), tp), s),
+        "wf": ParamDef((cfg.d, cfg.d), P(sh.fs(cfg.d), tp), s),
+        "wog": ParamDef((cfg.d, cfg.d), P(sh.fs(cfg.d), tp), s),
+        # block-diagonal recurrent weights: per head (dh x dh)
+        "rz": ParamDef((cfg.heads, cfg.dh, cfg.dh), P(tp, None, None), 0.1),
+        "ri": ParamDef((cfg.heads, cfg.dh, cfg.dh), P(tp, None, None), 0.1),
+        "rf": ParamDef((cfg.heads, cfg.dh, cfg.dh), P(tp, None, None), 0.1),
+        "rog": ParamDef((cfg.heads, cfg.dh, cfg.dh), P(tp, None, None), 0.1),
+        "bf": ParamDef((cfg.d,), P(tp), zero=True),
+        "wo": ParamDef((cfg.d, cfg.d), P(tp, sh.fs(cfg.d)), s),
+    }
+
+
+def _mlstm_chunk(carry, inp):
+    """carry: (Cmat (B,H,dh,dh), n (B,H,dh), m (B,H)).
+    inp: q,k,v (B,L,H,dh); logi, logf (B,L,H) — log-space gates."""
+    Cm, n, m = carry
+    q, k, v, li, lf = inp
+    B, L, H, dh = q.shape
+    # cumulative log forget inside the chunk
+    F = jnp.cumsum(lf, axis=1)                             # (B,L,H)
+    # stabilizer: m' = max(m + F_total, max_t(li + F_total - F_t))
+    Ftot = F[:, -1]
+    a = li + (Ftot[:, None] - F)                           # weight for each t
+    m_new = jnp.maximum(m + Ftot, jnp.max(a, axis=1))
+    carry_scale = jnp.exp(m + Ftot - m_new)                # (B,H)
+    w = jnp.exp(a - m_new[:, None])                        # (B,L,H)
+    kw = k * w[..., None]
+    C_new = Cm * carry_scale[..., None, None] + \
+        jnp.einsum("blhd,blhe->bhde", kw, v)
+    n_new = n * carry_scale[..., None] + jnp.sum(kw, axis=1)
+    # outputs per position: prefix state + intra-chunk causal part
+    Fq = F                                                  # (B,L,H)
+    mq = jnp.maximum(m[:, None] + Fq,
+                     jax.lax.cummax(li + Fq, axis=1))       # per-pos stabil.
+    pre_scale = jnp.exp(m[:, None] + Fq - mq)               # (B,L,H)
+    y_pre = jnp.einsum("blhd,bhde->blhe", q, Cm) * pre_scale[..., None]
+    n_pre = jnp.einsum("blhd,bhd->blh", q, n) * pre_scale
+    # intra-chunk: position t attends s <= t with weight exp(li_s+F_t-F_s-mq_t)
+    wmat = li[:, None, :, :] + (Fq[:, :, None, :] - F[:, None, :, :]) \
+        - mq[:, :, None, :]                                 # (B,t,s,H)
+    causal = jnp.tril(jnp.ones((L, L), bool))
+    wmat = jnp.where(causal[None, :, :, None], jnp.exp(wmat), 0.0)
+    scores = jnp.einsum("bthd,bshd->btsh", q, k) * wmat
+    y_intra = jnp.einsum("btsh,bshe->bthe", scores, v)
+    n_intra = jnp.einsum("btsh,bshd->bth",
+                         scores, jnp.ones_like(k[..., :1])) \
+        if False else jnp.sum(scores, axis=2)
+    y = y_pre + y_intra
+    nq = n_pre + n_intra
+    denom = jnp.maximum(jnp.abs(nq), jnp.exp(-mq))
+    y = y / denom[..., None]
+    return (C_new, n_new, m_new), y
+
+
+def mlstm(cfg: XlstmCfg, sh: ShardCfg, p, x: jnp.ndarray,
+          cache: Optional[Dict] = None
+          ) -> Tuple[jnp.ndarray, Optional[Dict]]:
+    B, S, D = x.shape
+    H, dh = cfg.heads, cfg.dh
+    q = jnp.einsum("bsd,de->bse", x, p["wq"].astype(x.dtype))
+    k = jnp.einsum("bsd,de->bse", x, p["wk"].astype(x.dtype)) / math.sqrt(dh)
+    v = jnp.einsum("bsd,de->bse", x, p["wv"].astype(x.dtype))
+    q = q.reshape(B, S, H, dh)
+    k = k.reshape(B, S, H, dh)
+    v = v.reshape(B, S, H, dh)
+    li = (jnp.einsum("bsd,dh->bsh", x, p["wi"].astype(x.dtype))
+          ).astype(jnp.float32)
+    lf = jax.nn.log_sigmoid(
+        jnp.einsum("bsd,dh->bsh", x, p["wf"].astype(x.dtype))
+        .astype(jnp.float32) + p["bf"].astype(jnp.float32))
+    qf, kf, vf = (t.astype(jnp.float32) for t in (q, k, v))
+
+    if cache is not None and S == 1:
+        Cm, n, m = cache["C"], cache["n"], cache["m"]
+        li0, lf0 = li[:, 0], lf[:, 0]
+        m_new = jnp.maximum(m + lf0, li0)
+        Cs = jnp.exp(m + lf0 - m_new)
+        iw = jnp.exp(li0 - m_new)
+        C_new = Cm * Cs[..., None, None] + \
+            jnp.einsum("bhd,bhe->bhde", kf[:, 0] * iw[..., None], vf[:, 0])
+        n_new = n * Cs[..., None] + kf[:, 0] * iw[..., None]
+        y = jnp.einsum("bhd,bhde->bhe", qf[:, 0], C_new)
+        nq = jnp.einsum("bhd,bhd->bh", qf[:, 0], n_new)
+        y = y / jnp.maximum(jnp.abs(nq), 1.0)[..., None]
+        y = y[:, None]
+        new_cache = {"C": C_new, "n": n_new, "m": m_new}
+    else:
+        L = min(CHUNK, S)
+        assert S % L == 0
+        nCh = S // L
+        r = lambda t: t.reshape(B, nCh, L, *t.shape[2:]).swapaxes(0, 1)
+        carry = (jnp.zeros((B, H, dh, dh), jnp.float32),
+                 jnp.zeros((B, H, dh), jnp.float32),
+                 jnp.full((B, H), -1e30, jnp.float32))
+        if cache is not None:
+            carry = (cache["C"], cache["n"], cache["m"])
+        (Cf, nf, mf), ys = jax.lax.scan(
+            _mlstm_chunk, carry, (r(qf), r(kf), r(vf), r(li), r(lf)))
+        y = ys.swapaxes(0, 1).reshape(B, S, H, dh)
+        new_cache = {"C": Cf, "n": nf, "m": mf} if cache is not None else None
+    og = jax.nn.sigmoid(jnp.einsum("bsd,de->bse", x,
+                                   p["ogate"].astype(x.dtype)))
+    y = (y.reshape(B, S, D).astype(x.dtype)) * og
+    out = jnp.einsum("bse,ed->bsd", y, p["wo"].astype(x.dtype))
+    return cstr(out, P(sh.dp, None, None)), new_cache
+
+
+def slstm(cfg: XlstmCfg, sh: ShardCfg, p, x: jnp.ndarray,
+          cache: Optional[Dict] = None
+          ) -> Tuple[jnp.ndarray, Optional[Dict]]:
+    """Scalar-memory LSTM with exponential gating; scan over tokens."""
+    B, S, D = x.shape
+    H, dh = cfg.heads, cfg.dh
+    pre = {g: jnp.einsum("bsd,de->bse", x, p[w].astype(x.dtype))
+           .astype(jnp.float32)
+           for g, w in (("z", "wz"), ("i", "wi"), ("f", "wf"),
+                        ("o", "wog"))}
+    pre["f"] = pre["f"] + p["bf"].astype(jnp.float32)
+    R = {g: p[r].astype(jnp.float32)
+         for g, r in (("z", "rz"), ("i", "ri"), ("f", "rf"), ("o", "rog"))}
+
+    def step(carry, t):
+        c, n, h, m = carry                                  # (B,H,dh) each
+        def rec(g):
+            return jnp.einsum("bhd,hde->bhe", h, R[g])
+        zt = jnp.tanh(t["z"].reshape(B, H, dh) + rec("z"))
+        it = t["i"].reshape(B, H, dh) + rec("i")
+        ft = t["f"].reshape(B, H, dh) + rec("f")
+        ot = jax.nn.sigmoid(t["o"].reshape(B, H, dh) + rec("o"))
+        lf = jax.nn.log_sigmoid(ft)
+        m_new = jnp.maximum(lf + m, it)
+        ig = jnp.exp(it - m_new)
+        fg = jnp.exp(lf + m - m_new)
+        c_new = fg * c + ig * zt
+        n_new = jnp.maximum(fg * n + ig, jnp.exp(-m_new))
+        h_new = ot * (c_new / n_new)
+        return (c_new, n_new, h_new, m_new), h_new
+
+    if cache is not None:
+        carry = (cache["c"], cache["n"], cache["h"], cache["m"])
+    else:
+        z = jnp.zeros((B, H, dh), jnp.float32)
+        carry = (z, jnp.ones_like(z), z, jnp.zeros((B, H, dh), jnp.float32))
+    seq = {k2: v.swapaxes(0, 1) for k2, v in pre.items()}
+    carry, hs = jax.lax.scan(lambda c, t: step(c, t), carry,
+                             {k2: seq[k2] for k2 in seq})
+    y = hs.swapaxes(0, 1).reshape(B, S, D).astype(x.dtype)
+    out = jnp.einsum("bse,ed->bsd", y, p["wo"].astype(x.dtype))
+    new_cache = None
+    if cache is not None:
+        new_cache = {"c": carry[0], "n": carry[1], "h": carry[2],
+                     "m": carry[3]}
+    return cstr(out, P(sh.dp, None, None)), new_cache
+
+
+def make_xlstm_cache(cfg: XlstmCfg, batch: int) -> Dict:
+    H, dh = cfg.heads, cfg.dh
+    if cfg.kind == "mlstm":
+        return {"C": jnp.zeros((batch, H, dh, dh), jnp.float32),
+                "n": jnp.zeros((batch, H, dh), jnp.float32),
+                "m": jnp.full((batch, H), -1e30, jnp.float32)}
+    z = jnp.zeros((batch, H, dh), jnp.float32)
+    return {"c": z, "n": jnp.ones_like(z), "h": z, "m": jnp.zeros_like(z)}

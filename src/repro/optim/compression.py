@@ -1,0 +1,54 @@
+"""Int8 gradient compression with error feedback (distributed-opt trick).
+
+Used by the training loop between microbatch accumulation and the
+optimizer: gradients are quantized to int8 with a per-tensor scale before
+the cross-replica reduction (4x less all-reduce traffic), and the
+quantization residual is carried to the next step (error feedback keeps
+the scheme unbiased in the long run).
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+class EFState(NamedTuple):
+    residual: Any
+
+
+def init_ef(params) -> EFState:
+    return EFState(residual=jax.tree_util.tree_map(
+        lambda p: jnp.zeros(p.shape, jnp.float32), params))
+
+
+def compress(g: jnp.ndarray, res: jnp.ndarray
+             ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """float grad + carried residual -> (int8 codes, scale, new residual)."""
+    gf = g.astype(jnp.float32) + res
+    scale = jnp.maximum(jnp.max(jnp.abs(gf)), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(gf / scale), -127, 127).astype(jnp.int8)
+    new_res = gf - q.astype(jnp.float32) * scale
+    return q, scale, new_res
+
+
+def decompress(q: jnp.ndarray, scale: jnp.ndarray) -> jnp.ndarray:
+    return q.astype(jnp.float32) * scale
+
+
+def compress_tree(grads, ef: EFState):
+    qs = jax.tree_util.tree_map(
+        lambda g, r: compress(g, r), grads, ef.residual,
+    )
+    codes = jax.tree_util.tree_map(lambda t: t[0], qs,
+                                   is_leaf=lambda t: isinstance(t, tuple))
+    scales = jax.tree_util.tree_map(lambda t: t[1], qs,
+                                    is_leaf=lambda t: isinstance(t, tuple))
+    res = jax.tree_util.tree_map(lambda t: t[2], qs,
+                                 is_leaf=lambda t: isinstance(t, tuple))
+    return codes, scales, EFState(residual=res)
+
+
+def decompress_tree(codes, scales):
+    return jax.tree_util.tree_map(decompress, codes, scales)

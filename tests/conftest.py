@@ -1,0 +1,21 @@
+import os
+import sys
+
+# src layout import without install
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import numpy as np
+import pytest
+
+from repro.core import pcs as PCS
+
+
+@pytest.fixture(scope="session")
+def params():
+    # small query count: tests exercise logic, not the security level
+    return PCS.PCSParams(blowup=4, queries=8)
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(0)

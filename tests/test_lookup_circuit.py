@@ -1,0 +1,122 @@
+"""LogUp lookup argument + circuit gadget tests (incl. soundness)."""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.core import circuit as C
+from repro.core import field as F
+from repro.core import lookup as LK
+from repro.core import luts
+from repro.core import pcs as PCS
+from repro.core.mle import mle_eval_base
+from repro.core.transcript import Transcript
+
+
+def test_range_lookup_roundtrip(rng, params):
+    idx = rng.integers(0, 256, 64)
+    pf = LK.prove(idx, None, None, 8, Transcript("r"), params)
+    ok, pt, claim, _ = LK.verify(pf, 64, None, 8, Transcript("r"), params)
+    assert ok
+    assert np.array_equal(
+        np.asarray(mle_eval_base(F.f_from_int(idx), jnp.asarray(pt))),
+        claim)
+
+
+def test_pair_lookup_roundtrip(rng, params):
+    T = luts.table_q("rsqrt").astype(np.int64)
+    idx = rng.integers(0, 1 << 16, 32)
+    out = T[idx]
+    pf = LK.prove(idx, out, T, 16, Transcript("p"), params)
+    ok, pt, ic, oc = LK.verify(pf, 32, T, 16, Transcript("p"), params)
+    assert ok
+    assert np.array_equal(
+        np.asarray(mle_eval_base(F.f_from_int(out), jnp.asarray(pt))), oc)
+
+
+def test_pair_lookup_bad_pair_rejected(rng, params):
+    T = luts.table_q("rsqrt").astype(np.int64)
+    idx = rng.integers(0, 1 << 16, 32)
+    out = T[idx].copy()
+    out[3] += 1                         # not a table pair any more
+    pf = LK.prove(idx, out, T, 16, Transcript("p"), params)
+    ok, *_ = LK.verify(pf, 32, T, 16, Transcript("p"), params)
+    assert not ok
+
+
+def _mini_circuit(ctx, A, B, out, err, n, k, m, witness):
+    wb = C.WitnessBuilder("aux")
+    a_l = wb.alloc_limbs("A", n * k, A if witness else None)
+    b_l = wb.alloc_limbs("B", k * m, B if witness else None)
+    o_l = wb.alloc_limbs("out", n * m, out if witness else None)
+    e_r = wb.alloc_ranged("err", n * m, 8, err if witness else None)
+    sl = wb.build(ctx)
+    acc, r_i, r_j = C.g_int_matmul(ctx, a_l.hi(sl), a_l.lo(sl),
+                                   b_l.hi(sl), b_l.lo(sl), (n, k, m))
+    r = jnp.concatenate([r_i, r_j])
+    C.g_rescale(ctx, acc, r, o_l.view(sl), e_r.view(sl), 8, 16)
+    wb.run_checks(ctx, sl)
+    ctx.finalize()
+
+
+def test_int_matmul_rescale_roundtrip(rng, params):
+    n, k, m = 4, 8, 4
+    A = rng.integers(-500, 500, (n, k)).astype(np.int64)
+    B = rng.integers(-500, 500, (k, m)).astype(np.int64)
+    acc = A @ B
+    out = (acc + 128) >> 8
+    err = (acc + 128) - (out << 8)
+    pctx = C.ProverCtx(Transcript("blk"), params)
+    _mini_circuit(pctx, A, B, out, err, n, k, m, True)
+    vctx = C.VerifierCtx(Transcript("blk"), params, pctx.tape)
+    _mini_circuit(vctx, None, None, None, None, n, k, m, False)
+
+
+def test_int_matmul_tampered_out_rejected(rng, params):
+    n, k, m = 4, 8, 4
+    A = rng.integers(-500, 500, (n, k)).astype(np.int64)
+    B = rng.integers(-500, 500, (k, m)).astype(np.int64)
+    acc = A @ B
+    out = (acc + 128) >> 8
+    out[0, 0] += 1                      # lie about the rescaled output
+    err = (acc + 128) - (((acc + 128) >> 8) << 8)
+    orig = C._Ctx.check_eq
+    C._Ctx.check_eq = lambda self, a, b, w: None   # malicious prover
+    try:
+        pctx = C.ProverCtx(Transcript("blk"), params)
+        _mini_circuit(pctx, A, B, out, err, n, k, m, True)
+    finally:
+        C._Ctx.check_eq = orig
+    vctx = C.VerifierCtx(Transcript("blk"), params, pctx.tape)
+    with pytest.raises(C.ProofError):
+        _mini_circuit(vctx, None, None, None, None, n, k, m, False)
+
+
+def test_out_of_range_witness_rejected(rng, params):
+    wb = C.WitnessBuilder("aux")
+    with pytest.raises(AssertionError):
+        wb.alloc("bad", 8, np.array([0, 1, 2, 3, 4, 5, 6, 999]))
+
+
+def test_views_algebra(rng, params):
+    # claims on Affine/Bcast/Concat views decompose correctly
+    vals = rng.integers(0, 200, 16)
+    pctx = C.ProverCtx(Transcript("v"), params)
+    wb = C.WitnessBuilder("w")
+    wb.alloc("x", 16, vals)
+    sl = wb.build(pctx)
+    x = sl["x"]
+    aff = C.vaff([(3, x)], const=7)
+    pt = jnp.asarray(F.f4_from_base(F.f_from_int(rng.integers(0, F.P, 4))))
+    got = pctx.claim(aff, pt)
+    want = F.f4add(F.f4mul(C._fc(3), mle_eval_base(F.f_from_int(vals), pt)),
+                   C._fc(7))
+    assert np.array_equal(np.asarray(got), np.asarray(want))
+    # materialized broadcast matches MLE semantics
+    bc = C.BcastCols(x, 2)
+    mat = pctx.materialize(bc)
+    assert np.array_equal(np.asarray(F.f_to_int(mat)),
+                          np.repeat(vals, 4))
+    br = C.BcastRows(x, 2)
+    mat2 = pctx.materialize(br)
+    assert np.array_equal(np.asarray(F.f_to_int(mat2)),
+                          np.tile(vals, 4))

@@ -1,0 +1,92 @@
+"""Per-arch smoke tests: reduced config, one forward/loss/decode step on
+CPU, asserting output shapes + no NaNs (deliverable f)."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import ARCHS, get_arch
+from repro.models import model as MDL
+from repro.models.layers import ShardCfg
+
+SH = ShardCfg(dp=("data",), tp_size=1, dp_size=1)
+RNG = jax.random.PRNGKey(0)
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_arch_smoke(arch):
+    cfg = get_arch(arch).smoke
+    params = MDL.init(cfg, SH, RNG)
+    B, S = 2, 16
+    toks = jax.random.randint(RNG, (B, S), 0, cfg.vocab)
+    enc = None
+    if cfg.encoder is not None:
+        enc = jax.random.normal(RNG, (B, cfg.encoder.frames, cfg.d),
+                                jnp.bfloat16)
+    logits, _, _ = MDL.forward(cfg, SH, params, toks, enc_input=enc)
+    assert logits.shape == (B, S, cfg.vocab_padded)
+    assert not bool(jnp.isnan(logits.astype(jnp.float32)).any())
+    loss = MDL.loss_fn(cfg, SH, params, toks, toks, enc_input=enc,
+                       remat=False)
+    assert np.isfinite(float(loss))
+    # one decode step against a fresh cache
+    caches = MDL.make_caches(cfg, SH, B, 32)
+    lg, caches2 = MDL.decode_step(cfg, SH, params, toks[:, :1],
+                                  jnp.zeros(B, jnp.int32), caches,
+                                  enc_input=enc)
+    assert lg.shape == (B, cfg.vocab_padded)
+    assert not bool(jnp.isnan(lg.astype(jnp.float32)).any())
+
+
+@pytest.mark.parametrize("arch", ["gpt2_small", "jamba_v0_1_52b",
+                                  "gemma3_1b"])
+def test_scan_layers_matches_loop(arch):
+    """scan-over-layers must be numerically identical to the plain loop."""
+    cfg = get_arch(arch).smoke
+    sh = SH
+    params_loop = MDL.init(cfg, sh, RNG)
+    params_scan = MDL.init(cfg, sh, RNG, scan_layers=True)
+    # rebuild scan params FROM the loop params so weights match
+    p, k = MDL.scan_split(cfg)
+    blocks = {}
+    for j in range(p):
+        per = [params_loop["layers"][r * p + j] for r in range(k)]
+        blocks[f"pos{j}"] = jax.tree_util.tree_map(
+            lambda *xs: jnp.stack(xs), *per)
+    params_scan = dict(params_loop)
+    del params_scan["layers"]
+    params_scan["blocks"] = blocks
+    params_scan["tail"] = params_loop["layers"][p * k:]
+    toks = jax.random.randint(RNG, (2, 16), 0, cfg.vocab)
+    l1, _, _ = MDL.forward(cfg, sh, params_loop, toks)
+    l2, _, _ = MDL.forward(cfg, sh, params_scan, toks)
+    # jamba's MoE router amplifies bf16 accumulation-order differences
+    # (top-k near-ties re-route); dense archs agree tightly.
+    tol = 0.15 if arch == "jamba_v0_1_52b" else 2e-2
+    np.testing.assert_allclose(np.asarray(l1, np.float32),
+                               np.asarray(l2, np.float32),
+                               rtol=tol, atol=tol)
+
+
+def test_lut_forward_close_to_exact():
+    """The LUT-approximated serving path tracks the exact model (§4).
+
+    Embeddings are scaled to trained-model magnitude (O(1) activations):
+    the rsqrt table's published [0.01, 10] domain assumes normalized
+    activations, which random 0.02-sigma init does not produce.
+    """
+    cfg = get_arch("gpt2_small").smoke
+    params = MDL.init(cfg, SH, RNG)
+    params = dict(params)
+    params["embed"] = params["embed"] * 50.0
+    toks = jax.random.randint(RNG, (2, 16), 0, cfg.vocab)
+    exact, _, _ = MDL.forward(cfg, SH, params, toks, use_lut=False)
+    lut, _, _ = MDL.forward(cfg, SH, params, toks, use_lut=True)
+    e = np.asarray(exact, np.float32)
+    l = np.asarray(lut, np.float32)
+    # random-init models exceed the published clamp ranges more than
+    # trained ones (paper: >99.99% in-range); require close tracking,
+    # not bit-equality: median |diff| small and high correlation.
+    assert np.median(np.abs(e - l)) < 0.2
+    corr = np.corrcoef(e.reshape(-1), l.reshape(-1))[0, 1]
+    assert corr > 0.99

@@ -1,0 +1,72 @@
+"""Quantized reference ops: semantics + property-based invariants."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import qops as Q
+from repro.core import quantize as QZ
+
+
+@given(st.integers(min_value=-(1 << 28), max_value=(1 << 28)),
+       st.integers(min_value=1, max_value=16))
+@settings(max_examples=100, deadline=None)
+def test_rshift_round_relation(acc, s):
+    """The circuit's rescale relation: acc + 2^(s-1) = 2^s out + err,
+    err in [0, 2^s) — for every integer accumulator."""
+    out = int(Q.rshift_round(np.int64(acc), s))
+    err = acc + (1 << (s - 1)) - (out << s)
+    assert 0 <= err < (1 << s)
+
+
+@given(st.floats(min_value=-100, max_value=100))
+@settings(max_examples=100, deadline=None)
+def test_quantize_dequantize(x):
+    q = QZ.quantize(np.float32(x))
+    assert abs(float(QZ.dequantize(q)) - x) <= 1.0 / QZ.SCALE + 1e-6 \
+        or abs(x) > 127.9
+
+
+def test_softmax_relation_invariants(rng):
+    """Division-free softmax: 2^8 m e = P S + v with v in (-S/2, S/2],
+    P in [0, 256], masked P = 0."""
+    seq, dh = 16, 8
+    q = rng.integers(-200, 200, (dh, seq))
+    k = rng.integers(-200, 200, (dh, seq))
+    v = rng.integers(-200, 200, (dh, seq))
+    mask = np.tril(np.ones((seq, seq), dtype=np.int64))
+    tr = Q.q_attention_head(q, k, v, mask)
+    e, S, P = tr["e"], tr["S"], tr["P"]
+    num = (mask * e) << 8
+    vres = num - P * S[:, None]
+    assert (2 * vres > -S[:, None]).all()
+    assert (2 * vres <= S[:, None]).all()
+    assert P.min() >= 0 and P.max() <= 256
+    assert (P * (1 - mask) == 0).all()
+    # probabilities approximately sum to 1 (f=8 codes sum ~ 256)
+    rowsums = P.sum(axis=1)
+    assert np.all(np.abs(rowsums - 256) <= seq)
+
+
+def test_layernorm_matches_float(rng):
+    d, seq = 32, 8
+    x = rng.normal(0, 1.0, (d, seq))
+    xq = np.round(x * 256).astype(np.int64)
+    g = np.ones(d)
+    gq = np.round(g * 256).astype(np.int64)
+    b = np.zeros(d, dtype=np.int64)
+    tr = Q.q_layernorm(xq, gq, b, subtract_mean=True)
+    yq = tr["y"] / 256.0
+    mu = x.mean(0)
+    ref = (x - mu) / np.sqrt(((x - mu) ** 2).mean(0) + 1e-9)
+    assert np.max(np.abs(yq - ref)) < 0.05
+
+
+def test_rope_orthogonality(rng):
+    """RoPE preserves vector norms (rotations), up to quantization."""
+    dh, seq = 16, 8
+    x = rng.integers(-1000, 1000, (dh, seq))
+    C, Sn = Q.rope_tables(dh, seq)
+    out = Q.q_rope(x, C, Sn)["y"]
+    n0 = np.linalg.norm(x.astype(float), axis=0)
+    n1 = np.linalg.norm(out.astype(float), axis=0)
+    assert np.allclose(n0, n1, rtol=0.02, atol=3.0)

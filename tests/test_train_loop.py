@@ -1,0 +1,91 @@
+"""Training loop integration: loss decreases, checkpoint resume works."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.launch.train import TrainCfg, train
+from repro.models.layers import (AttnCfg, MoeCfg, ShardCfg, attention,
+                                 attn_defs, init_params, moe, moe_defs)
+
+SH = ShardCfg(dp=("data",), tp_size=1, dp_size=1)
+
+
+def test_training_reduces_loss(tmp_path):
+    tc = TrainCfg(steps=30, batch=4, seq=32, microbatches=2,
+                  compress_grads=True, remat=False,
+                  ckpt_dir=str(tmp_path / "ck"), ckpt_every=20,
+                  log_every=100)
+    out = train("gpt2_small", tc, smoke=True, resume=False)
+    losses = out["losses"]
+    assert losses[-1] < losses[0]
+    # resume from checkpoint continues the step count (elastic restart)
+    tc2 = TrainCfg(steps=35, batch=4, seq=32, microbatches=2,
+                   compress_grads=True, remat=False,
+                   ckpt_dir=str(tmp_path / "ck"), ckpt_every=100,
+                   log_every=100)
+    out2 = train("gpt2_small", tc2, smoke=True, resume=True)
+    assert len(out2["losses"]) == 15          # resumed at step 20
+
+
+def test_moe_sort_matches_einsum_dispatch():
+    """The sort-based dispatch (§Perf hillclimb A) is numerically
+    identical to the GShard einsum dispatch at high capacity."""
+    rng = jax.random.PRNGKey(0)
+    mc = MoeCfg(d=16, d_ff=32, n_experts=4, top_k=2,
+                capacity_factor=8.0)
+    p = init_params(moe_defs(mc, SH), rng)
+    x = jax.random.normal(rng, (2, 8, 16), jnp.float32)
+    o1, _ = moe(mc, SH, p, x, dispatch="sort")
+    o2, _ = moe(mc, SH, p, x, dispatch="einsum")
+    np.testing.assert_allclose(np.asarray(o1), np.asarray(o2),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_banded_attention_matches_dense_window():
+    """Banded sliding-window attention (§Perf hillclimb B) equals the
+    dense masked computation."""
+    rng = jax.random.PRNGKey(1)
+    W = 8
+    cfg = AttnCfg(d=32, heads=2, kv_heads=2, dh=16, window=W, rope="none")
+    p = init_params(attn_defs(cfg, SH), rng)
+    x = jax.random.normal(rng, (2, 64, 32), jnp.float32)
+    pos = jnp.arange(64)
+    banded, _ = attention(cfg, SH, p, x, pos)       # S=64 > 2W -> banded
+    # dense path: force by raising the window threshold via a big window
+    import repro.models.layers as LY
+    orig = LY._banded_attention
+    LY._banded_attention = lambda *a, **k: (_ for _ in ()).throw(
+        AssertionError("should not be called"))
+    try:
+        cfg_dense = AttnCfg(d=32, heads=2, kv_heads=2, dh=16, window=W,
+                            rope="none")
+        # disable banded path by monkeypatching the condition: call the
+        # dense code through a copy of attention with window masking
+        LY._banded_attention = orig
+        import dataclasses
+        # trick: make S <= 2*window false -> use the module-level dense
+        # masked path by temporarily zeroing the banded branch
+        dense_out = _dense_window_reference(cfg, p, x, pos)
+    finally:
+        LY._banded_attention = orig
+    np.testing.assert_allclose(np.asarray(banded, np.float32),
+                               np.asarray(dense_out, np.float32),
+                               rtol=3e-2, atol=3e-2)
+
+
+def _dense_window_reference(cfg, p, x, pos):
+    import math
+    B, S, _ = x.shape
+    H, dh = cfg.heads, cfg.dh
+    q = jnp.einsum("bsd,dh->bsh", x, p["wq"]).reshape(B, S, H, dh)
+    k = jnp.einsum("bsd,dh->bsh", x, p["wk"]).reshape(B, S, H, dh)
+    v = jnp.einsum("bsd,dh->bsh", x, p["wv"]).reshape(B, S, H, dh)
+    sc = jnp.einsum("bqhd,bkhd->bhqk", q, k) / math.sqrt(dh)
+    kp = jnp.arange(S)[None, :]
+    qp = pos[:, None]
+    mask = (kp <= qp) & (kp > qp - cfg.window)
+    sc = jnp.where(mask[None, None], sc, -1e30)
+    pr = jax.nn.softmax(sc, axis=-1)
+    o = jnp.einsum("bhqk,bkhd->bqhd", pr, v).reshape(B, S, H * dh)
+    return jnp.einsum("bsh,hd->bsd", o, p["wo"])
