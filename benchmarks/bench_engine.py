@@ -1,0 +1,150 @@
+"""Prover-engine throughput: sequential vs parallel layerwise proving.
+
+The paper's §3.3 claim is that layerwise decomposition *enables parallel
+proving*; this benchmark measures it on a >=4-layer chain.  Both runs go
+through the identical staged ProverEngine — only the worker count of the
+stage-3 proof fleet differs — and Fiat-Shamir determinism means the
+parallel run's transcripts are bit-identical to the sequential ones
+(asserted here).  Results land in BENCH_engine.json at the repo root:
+
+    PYTHONPATH=src python benchmarks/bench_engine.py [--ci]
+"""
+import argparse
+import json
+import os
+import pickle
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+import numpy as np
+
+ROOT = os.path.join(os.path.dirname(__file__), "..")
+
+
+def run(ci: bool = True, layers: int = 4, workers: int = None,
+        queries: int = 4, out: str = None):
+    if workers is None:
+        workers = min(4, max(2, os.cpu_count() or 2))
+    from repro.core import blocks as B
+    from repro.core import chain as CH
+    from repro.core import pcs as PCS
+    from repro.runtime.engine import ProverEngine, WeightCommitCache
+
+    d, heads = (16, 2) if ci else (32, 4)
+    cfg = B.BlockCfg(family="gpt2", d=d, dff=4 * d, heads=heads,
+                     kv_heads=heads, dh=d // heads, seq=8)
+    params = PCS.PCSParams(blowup=4, queries=queries)
+    rng = np.random.default_rng(0)
+    weights = [B.init_weights(cfg, rng) for _ in range(layers)]
+    x0 = np.clip(np.round(rng.normal(0, 0.5,
+                                     (cfg.d_pad, cfg.seq)) * 256),
+                 -32768, 32767).astype(np.int64)
+    cache = WeightCommitCache()
+    cfgs = [cfg] * layers
+
+    print(f"setup: {layers} layers, d={d}, queries={queries} "
+          "(weight commits + range proofs, cached)...", flush=True)
+    t0 = time.time()
+    warm = ProverEngine(cfgs, weights, params, weight_cache=cache,
+                        workers=1)
+    _ = warm.wt_commits
+    # warm the jit caches so neither timed run pays compilation
+    warm.prove(x0, layer_subset=[0])
+    t_setup = time.time() - t0
+    print(f"setup+warmup in {t_setup:.1f}s", flush=True)
+
+    results = {}
+    proofs = {}
+    runs = (("sequential", 1, "thread"),
+            ("parallel_threads", workers, "thread"),
+            ("sequential_fleet", 1, "process"),
+            ("parallel", workers, "process"))
+    for label, n_workers, backend in runs:
+        eng = ProverEngine(cfgs, weights, params, weight_cache=cache,
+                           workers=n_workers, backend=backend)
+        if backend == "process":
+            # warm the fleet untimed: spawned workers pay import + jit
+            # once, then stay resident (the serving steady state)
+            eng.prove(x0)
+        t0 = time.time()
+        proof, report = eng.prove(x0)
+        wall = time.time() - t0
+        eng.close()
+        proofs[label] = proof
+        results[label] = {
+            "workers": n_workers,
+            "backend": backend,
+            "wall_seconds": wall,
+            "prove_seconds": report.prove_seconds,
+            "commit_seconds": report.commit_seconds,
+            "forward_seconds": report.forward_seconds,
+            "proofs_per_sec": layers / report.prove_seconds,
+            "claims": report.claims,
+        }
+        print(f"{label} ({n_workers} {backend} workers): {wall:.1f}s wall, "
+              f"{layers / report.prove_seconds:.3f} layer proofs/sec",
+              flush=True)
+
+    identical = all(
+        pickle.dumps(a.tape) == pickle.dumps(p.layer_proofs[i].tape)
+        for p in proofs.values()
+        for i, a in enumerate(proofs["sequential"].layer_proofs))
+    # headline: wall-clock scaling of the proving fleet (1 -> N workers,
+    # same process-backed architecture).  Also report parallel vs the
+    # in-process sequential loop — on a box this small (cpu_count cores)
+    # the in-process prover already soaks up the idle core via XLA
+    # intra-op threads, so that ratio is hardware-capped near 1.
+    speedup = (results["sequential_fleet"]["prove_seconds"]
+               / results["parallel"]["prove_seconds"])
+    speedup_vs_inprocess = (results["sequential"]["prove_seconds"]
+                            / results["parallel"]["prove_seconds"])
+    print(f"fleet scaling 1->{workers} workers: {speedup:.2f}x "
+          f"(vs in-process sequential: {speedup_vs_inprocess:.2f}x), "
+          f"identical transcripts: {identical}", flush=True)
+
+    report = {
+        "config": {"layers": layers, "d": d, "heads": heads, "seq": 8,
+                   "pcs_queries": queries, "ci": ci,
+                   "cpu_cores": os.cpu_count()},
+        "setup_warmup_seconds": t_setup,
+        "sequential": results["sequential"],
+        "parallel_threads": results["parallel_threads"],
+        "sequential_fleet": results["sequential_fleet"],
+        "parallel": results["parallel"],
+        "speedup": speedup,
+        "speedup_vs_inprocess_sequential": speedup_vs_inprocess,
+        "identical_transcripts": identical,
+        "cache": {"hits": cache.hits, "misses": cache.misses},
+        "note": ("speedup = wall-clock fleet scaling of process-backed "
+                 "parallel proving (1 vs N workers). Thread workers "
+                 "cannot scale the dispatch-bound prover (GIL); on "
+                 "few-core hosts the in-process sequential loop already "
+                 "uses idle cores via XLA intra-op threading, capping "
+                 "speedup_vs_inprocess_sequential near 1.0."),
+    }
+    path = out or os.path.join(ROOT, "BENCH_engine.json")
+    with open(path, "w") as f:
+        json.dump(report, f, indent=1)
+    print(f"wrote {os.path.abspath(path)}")
+    return report
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--ci", action="store_true",
+                    help="small widths/query counts (CI sizes)")
+    ap.add_argument("--layers", type=int, default=4)
+    ap.add_argument("--workers", type=int, default=None,
+                    help="prover fleet size (default: min(4, cpu_count))")
+    ap.add_argument("--queries", type=int, default=4)
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args()
+    run(ci=args.ci, layers=args.layers, workers=args.workers,
+        queries=args.queries, out=args.out)
+
+
+if __name__ == "__main__":
+    main()

@@ -18,9 +18,10 @@ def main():
     args = ap.parse_args()
     ci = not args.full
 
-    from benchmarks import (roofline, table1_lut_errors, table2_fisher,
-                            table3_block_proof, table4_monolithic,
-                            table5_ppl, table6_mlp_scaling)
+    from benchmarks import (bench_engine, roofline, table1_lut_errors,
+                            table2_fisher, table3_block_proof,
+                            table4_monolithic, table5_ppl,
+                            table6_mlp_scaling)
     modules = {
         "table1": table1_lut_errors,
         "table2": table2_fisher,
@@ -29,6 +30,7 @@ def main():
         "table5": table5_ppl,
         "table6": table6_mlp_scaling,
         "roofline": roofline,
+        "engine": bench_engine,
     }
     if args.only:
         names = args.only.split(",")

@@ -3,7 +3,11 @@
 Paper: d in {64..768}, ~6.2 s prove, ~23 ms verify, constant 6.9 KB.
 Ours: Ligero-based sizes/times (DESIGN.md §2 records the trade: proofs
 are O(sqrt N) not O(log N), in exchange for transparent, TPU-native
-proving). CI mode uses narrow widths so the suite stays fast.
+proving).  Proving goes through the staged ProverEngine (the same code
+path serving uses): weight setup is the WeightCommitCache's amortized
+cost, boundary commits are one batched PCS pass, and the prove column is
+the engine's stage-3 time.  CI mode uses narrow widths so the suite
+stays fast.
 """
 import numpy as np
 
@@ -12,8 +16,9 @@ from benchmarks.common import print_table, save_report, timed
 
 def run(ci: bool = False, seq: int = 8):
     from repro.core import blocks as B
-    from repro.core import layer_proof as LP
+    from repro.core import chain as CH
     from repro.core import pcs as PCS
+    from repro.runtime.engine import ProverEngine, WeightCommitCache
     params = PCS.PCSParams(blowup=4, queries=16)
     widths = [(16, 2), (32, 4)] if ci else [(64, 4), (128, 4), (256, 8)]
     rows, data = [], {}
@@ -25,19 +30,22 @@ def run(ci: bool = False, seq: int = 8):
         x = np.clip(np.round(rng.normal(0, 0.5,
                                         (cfg.d_pad, cfg.seq)) * 256),
                     -32768, 32767).astype(np.int64)
-        y, tr = B.block_forward(cfg, w, x)
-        wt, t_setup = timed(LP.setup_weights, cfg, w, params)
-        b_in = LP.commit_boundary(cfg, x, params)
-        b_out = LP.commit_boundary(cfg, y, params)
-        pf, t_prove = timed(LP.prove_layer, cfg, 0, wt, b_in, b_out, tr,
-                            params)
-        ok, t_verify = timed(LP.verify_layer, cfg, pf, wt.root, params)
+        cache = WeightCommitCache()
+        eng = ProverEngine([cfg], [w], params, weight_cache=cache)
+        _, t_setup = timed(lambda: eng.wt_commits)
+        (proof, report), _ = timed(eng.prove, x)
+        t_prove = report.commit_seconds + report.prove_seconds
+        ok, t_verify = timed(CH.verify_model, [cfg], proof,
+                             proof.wt_roots, params,
+                             proof.boundary_roots[0],
+                             proof.boundary_roots[-1])
         assert ok
-        size_kb = pf.size_bytes() / 1024
+        size_kb = proof.size_bytes() / 1024
         rows.append([d, 4 * d, f"{t_setup:.1f}", f"{t_prove:.1f}",
                      f"{t_verify:.1f}", f"{size_kb:.0f} KB"])
         data[d] = {"setup_s": t_setup, "prove_s": t_prove,
-                   "verify_s": t_verify, "size_kb": size_kb}
+                   "verify_s": t_verify, "size_kb": size_kb,
+                   "commit_s": report.commit_seconds}
     print_table("Table 3: block proofs (paper: 6.2 s prove / 23 ms verify"
                 " / 6.9 KB const)",
                 ["d", "d_ff", "setup (s)", "prove (s)", "verify (s)",

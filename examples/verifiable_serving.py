@@ -2,11 +2,14 @@
 
     PYTHONPATH=src python examples/verifiable_serving.py
 
-A 2-layer quantized model serves a query; the full commitment chain +
-layer proofs are generated (in the runtime these workers run in parallel
-across the mesh — layer proofs are independent, paper §3.3), then the
-client verifies, including the Eq. 3 adjacency checks. Also demonstrates
-Fisher-guided selective verification (§5) and the mix-and-match rejection.
+A 2-layer quantized model serves queries through the staged ProverEngine
+(runtime/engine.py): quantized forward replay, one batched boundary
+commit, then per-layer ProofJobs drained from the replay queue by a
+thread-pool prover fleet (layers are independent given the commitments —
+paper §3.3).  The client verifies, including the Eq. 3 adjacency checks
+and the query binding.  Also demonstrates the WeightCommitCache (the
+paper's setup amortization: the second query skips range-proof setup),
+Fisher-guided selective verification (§5), and mix-and-match rejection.
 """
 import os
 import sys
@@ -20,61 +23,84 @@ import numpy as np
 from repro.core import blocks as B
 from repro.core import chain as CH
 from repro.core import fisher as FI
-from repro.core import layer_proof as LP
 from repro.core import pcs as PCS
+from repro.launch import serve as SRV
+from repro.runtime.engine import WeightCommitCache
 
 
 def main():
-    params = PCS.PCSParams(blowup=4, queries=8)
     cfg = B.BlockCfg(family="gpt2", d=16, dff=32, heads=2, kv_heads=2,
                      dh=8, seq=8)
     L = 2
     rng = np.random.default_rng(0)
     weights = [B.init_weights(cfg, rng) for _ in range(L)]
+    serve_cfg = SRV.ServeCfg(pcs_queries=8, prove_workers=2)
+    params = PCS.PCSParams(queries=serve_cfg.pcs_queries)
+    cache = WeightCommitCache()
 
-    print("provider setup: commit weights once (published roots)...")
-    commits = [LP.setup_weights(cfg, w, params) for w in weights]
-    roots = [c.root for c in commits]
+    def query_input():
+        return np.clip(np.round(rng.normal(0, 0.5,
+                                           (cfg.d_pad, cfg.seq)) * 256),
+                       -32768, 32767).astype(np.int64)
 
-    print("client query arrives; provider runs the quantized model...")
-    x0 = np.clip(np.round(rng.normal(0, 0.5,
-                                     (cfg.d_pad, cfg.seq)) * 256),
-                 -32768, 32767).astype(np.int64)
-
+    print("client query arrives; provider proves via the staged engine "
+          f"({serve_cfg.prove_workers} prover workers)...")
+    x0 = query_input()
     t0 = time.time()
-    proof = CH.prove_model([cfg] * L, weights, commits, x0, params)
-    print(f"full proof ({L} layers) in {time.time()-t0:.1f}s, "
-          f"{proof.size_bytes()/1024:.0f} KB total")
+    resp = SRV.prove_query([cfg] * L, weights, None, x0, serve_cfg,
+                           weight_cache=cache)
+    rep = resp.engine_report
+    print(f"full proof ({L} layers) in {time.time()-t0:.1f}s "
+          f"(setup included; commit {rep.commit_seconds:.2f}s, prove "
+          f"{rep.prove_seconds:.1f}s), {resp.proof_bytes/1024:.0f} KB")
 
-    print("client verifies (incl. Eq. 3 commitment-chain adjacency)...")
+    roots = resp.model_proof.wt_roots
+    print("client verifies (Eq. 3 adjacency + query binding on its own "
+          "x0)...")
     t0 = time.time()
-    ok = CH.verify_model([cfg] * L, proof, roots, params,
-                         in_root=proof.boundary_roots[0],
-                         out_root=proof.boundary_roots[-1])
+    ok = SRV.verify_response([cfg] * L, resp, roots,
+                             pcs_queries=serve_cfg.pcs_queries, x0=x0)
     print(f"verified={ok} in {time.time()-t0:.1f}s")
     assert ok
+
+    print("\nsecond query, same model: weight setup amortized "
+          "(WeightCommitCache)...")
+    x1 = query_input()
+    t0 = time.time()
+    resp1 = SRV.prove_query([cfg] * L, weights, None, x1, serve_cfg,
+                            weight_cache=cache)
+    print(f"proved in {time.time()-t0:.1f}s — cache hits "
+          f"{cache.hits}, misses {cache.misses} (range-proof setup ran "
+          "only for query 1)")
+    assert cache.hits == L and cache.misses == L
 
     print("\nselective verification (paper §5): 50% budget...")
     imp = np.array([3.0, 1.0])
     scores = FI.FisherScores(imp, np.ones(L), imp)
-    subset = FI.select_fisher(scores, 1)
-    partial = CH.prove_model([cfg] * L, weights, commits, x0, params,
-                             layer_subset=subset)
-    print(f"proved layers {subset}: coverage "
-          f"{FI.importance_coverage(scores, subset)*100:.0f}% of Fisher "
-          f"mass at 50% cost")
+    sel_cfg = dataclasses.replace(serve_cfg, verify_budget=0.5)
+    resp_sel = SRV.prove_query([cfg] * L, weights, None, x1, sel_cfg,
+                               fisher_scores=scores, weight_cache=cache)
+    print(f"proved layers {resp_sel.proved_layers}: coverage "
+          f"{FI.importance_coverage(scores, resp_sel.proved_layers)*100:.0f}%"
+          " of Fisher mass at 50% cost")
 
     print("\nmix-and-match attack (splice a proof from another query)...")
-    x_other = np.clip(np.round(rng.normal(0, 0.5,
-                                          (cfg.d_pad, cfg.seq)) * 256),
-                      -32768, 32767).astype(np.int64)
-    other = CH.prove_model([cfg] * L, weights, commits, x_other, params)
-    frank = dataclasses.replace(
-        proof, layer_proofs=[proof.layer_proofs[0],
-                             other.layer_proofs[1]])
-    rejected = not CH.verify_model([cfg] * L, frank, roots, params)
+    frank_proof = dataclasses.replace(
+        resp.model_proof,
+        layer_proofs=[resp.model_proof.layer_proofs[0],
+                      resp1.model_proof.layer_proofs[1]])
+    frank = dataclasses.replace(resp, model_proof=frank_proof)
+    rejected = not SRV.verify_response([cfg] * L, frank, roots,
+                                       pcs_queries=serve_cfg.pcs_queries)
     print(f"spliced proof rejected: {rejected}")
     assert rejected
+
+    print("\nquery-binding attack (replay query-1 proof for query 2)...")
+    rebound = not SRV.verify_response([cfg] * L, resp, roots,
+                                      pcs_queries=serve_cfg.pcs_queries,
+                                      x0=x1)
+    print(f"replayed proof rejected: {rebound}")
+    assert rebound
 
 
 if __name__ == "__main__":

@@ -80,8 +80,11 @@ def save_async(tree, directory: str, step: int,
     global _writer
     if _writer is not None and _writer.is_alive():
         _writer.join()             # backpressure: one in flight
+    # owning copy, not a view: on CPU, device_get can alias the device
+    # buffer, which the caller's next donated step would reuse while the
+    # writer thread is still reading it
     host_tree = jax.tree_util.tree_map(
-        lambda x: np.asarray(jax.device_get(x)), tree)
+        lambda x: np.array(jax.device_get(x), copy=True), tree)
     _writer = threading.Thread(target=save,
                                args=(host_tree, directory, step, extra))
     _writer.start()

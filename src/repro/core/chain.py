@@ -40,32 +40,22 @@ def prove_model(cfgs: Sequence[B.BlockCfg],
                 weights_raw: Sequence[Dict[str, np.ndarray]],
                 wt_commits: Sequence[LP.WeightCommit],
                 x0: np.ndarray, params: PCS.PCSParams,
-                layer_subset: Optional[Sequence[int]] = None) -> ModelProof:
+                layer_subset: Optional[Sequence[int]] = None,
+                workers: int = 1) -> ModelProof:
     """Run the quantized forward chain and prove every (selected) layer.
 
-    Layer proofs are independent given the boundary commitments (paper
-    §3.3) — in the distributed runtime they are generated in parallel
-    across the mesh (launch/serve.py); here sequentially.
+    Thin wrapper over the staged ProverEngine (runtime/engine.py):
+    quantized forward replay, one batched PCS commit over all boundary
+    activations, then per-layer ProofJobs dispatched across ``workers``
+    prover threads (layer proofs are independent given the commitments,
+    paper §3.3).  Proving is Fiat-Shamir deterministic, so any worker
+    count yields identical transcripts.
     """
-    L = len(cfgs)
-    h = x0
-    boundaries = [LP.commit_boundary(cfgs[0], x0, params)]
-    traces = []
-    for l in range(L):
-        h, tr = B.block_forward(cfgs[l], weights_raw[l], h)
-        traces.append(tr)
-        boundaries.append(LP.commit_boundary(cfgs[min(l + 1, L - 1)], h,
-                                             params))
-    subset = range(L) if layer_subset is None else layer_subset
-    proofs = []
-    for l in subset:
-        proofs.append(LP.prove_layer(cfgs[l], l, wt_commits[l],
-                                     boundaries[l], boundaries[l + 1],
-                                     traces[l], params,
-                                     check_input_range=(l == 0)))
-    return ModelProof(layer_proofs=proofs,
-                      boundary_roots=[b.root for b in boundaries],
-                      wt_roots=[w.root for w in wt_commits])
+    from repro.runtime.engine import ProverEngine  # runtime sits above core
+    eng = ProverEngine(cfgs, weights_raw, params, wt_commits=wt_commits,
+                       workers=workers)
+    proof, _report = eng.prove(x0, layer_subset=layer_subset)
+    return proof
 
 
 def verify_model(cfgs: Sequence[B.BlockCfg], proof: ModelProof,

@@ -62,12 +62,19 @@ class LayerProof:
 # ---------------------------------------------------------------------------
 # Setup / commitment helpers.
 # ---------------------------------------------------------------------------
-def commit_boundary(cfg: B.BlockCfg, x: Optional[np.ndarray],
-                    params: PCS.PCSParams,
-                    name: str = "bnd") -> BoundaryCommit:
+def pack_boundary(cfg: B.BlockCfg, x: Optional[np.ndarray],
+                  name: str = "bnd"):
+    """Public boundary layout + packed witness ints (no commitment yet)."""
     wb = C.WitnessBuilder(name)
     layout = B.declare_boundary(cfg, wb, x)
     slices, packed, total = wb.pack()
+    return layout, slices, packed, total
+
+
+def commit_boundary(cfg: B.BlockCfg, x: Optional[np.ndarray],
+                    params: PCS.PCSParams,
+                    name: str = "bnd") -> BoundaryCommit:
+    layout, slices, packed, total = pack_boundary(cfg, x, name)
     if packed is None:
         return BoundaryCommit(None, None, None, total, slices, layout)
     import repro.core.field as F
@@ -75,9 +82,39 @@ def commit_boundary(cfg: B.BlockCfg, x: Optional[np.ndarray],
     return BoundaryCommit(com, packed, com.root, total, slices, layout)
 
 
-def setup_weights(cfg: B.BlockCfg, w: Optional[Dict[str, np.ndarray]],
-                  params: PCS.PCSParams, name: str = "wt") -> WeightCommit:
-    """Commit layer weights + produce the amortized range proof."""
+def commit_boundaries(cfgs: List[B.BlockCfg], xs: List[np.ndarray],
+                      params: PCS.PCSParams,
+                      name: str = "bnd") -> List[BoundaryCommit]:
+    """Commit all boundary activations through one vectorized PCS path.
+
+    Same-width boundaries (the common case: every inter-layer activation of
+    a homogeneous model) are stacked and committed by a single batched
+    NTT + Merkle pass (PCS.commit_batch) instead of L+1 separate commits;
+    mixed-width chains fall back to per-width groups.  Roots are
+    bit-identical to sequential ``commit_boundary`` calls.
+    """
+    import repro.core.field as F
+    packs = [pack_boundary(cfg, x, name) for cfg, x in zip(cfgs, xs)]
+    out: List[Optional[BoundaryCommit]] = [None] * len(packs)
+    groups: Dict[int, List[int]] = {}
+    for i, (layout, slices, packed, total) in enumerate(packs):
+        if packed is None:
+            out[i] = BoundaryCommit(None, None, None, total, slices, layout)
+        else:
+            groups.setdefault(packed.shape[0], []).append(i)
+    for idxs in groups.values():
+        coms = PCS.commit_batch(
+            [F.f_from_int(packs[i][2]) for i in idxs], params)
+        for i, com in zip(idxs, coms):
+            layout, slices, packed, total = packs[i]
+            out[i] = BoundaryCommit(com, packed, com.root, total, slices,
+                                    layout)
+    return out
+
+
+def commit_weights(cfg: B.BlockCfg, w: Optional[Dict[str, np.ndarray]],
+                   params: PCS.PCSParams, name: str = "wt") -> WeightCommit:
+    """Commit layer weights (no range proof — see weight_range_proof)."""
     wb = C.WitnessBuilder(name)
     layout = B.declare_weights(cfg, wb, w)
     slices, packed, total = wb.pack()
@@ -85,14 +122,28 @@ def setup_weights(cfg: B.BlockCfg, w: Optional[Dict[str, np.ndarray]],
         return WeightCommit(None, None, None, total, slices, layout, [])
     import repro.core.field as F
     com = PCS.commit(F.f_from_int(packed), params)
-    # standalone range proof over the weight commitment
+    return WeightCommit(com, packed, com.root, total, slices, layout, [])
+
+
+def weight_range_proof(wt: WeightCommit, params: PCS.PCSParams,
+                       name: str = "wt") -> List:
+    """Standalone range proof over a committed weight vector (setup cost;
+    runtime/engine.py caches it by weight root to amortize across queries)."""
     tr = Transcript("nanozk.wt.range")
     ctx = C.ProverCtx(tr, params)
-    ctx.attach(name, com, packed)
-    C.g_range8(ctx, name, total)
+    ctx.attach(name, wt.com, wt.ints)
+    C.g_range8(ctx, name, wt.n)
     ctx.finalize()
-    return WeightCommit(com, packed, com.root, total, slices, layout,
-                        ctx.tape)
+    return ctx.tape
+
+
+def setup_weights(cfg: B.BlockCfg, w: Optional[Dict[str, np.ndarray]],
+                  params: PCS.PCSParams, name: str = "wt") -> WeightCommit:
+    """Commit layer weights + produce the amortized range proof."""
+    wt = commit_weights(cfg, w, params, name)
+    if wt.com is not None:
+        wt.range_tape = weight_range_proof(wt, params, name)
+    return wt
 
 
 def verify_weight_setup(cfg: B.BlockCfg, root: np.ndarray, range_tape: List,

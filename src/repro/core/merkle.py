@@ -44,6 +44,29 @@ def commit(leaves: jnp.ndarray) -> MerkleTree:
     return MerkleTree(levels=levels)
 
 
+def commit_batch(leaves: jnp.ndarray) -> List[MerkleTree]:
+    """Commit B same-shape leaf sets at once: leaves (B, n, leaf_len).
+
+    One sponge pass hashes all B*n leaves and each tree level is one batched
+    compression over the whole group, so committing L+1 boundary activations
+    costs the same number of kernel dispatches as committing one.  Poseidon2
+    is elementwise over leading axes, so every returned tree (and root) is
+    bit-identical to ``commit(leaves[i])``.
+    """
+    b, n = leaves.shape[0], leaves.shape[1]
+    digests = P2.hash_elems(leaves)                       # (B, n, DIGEST)
+    n_pad = 1 << max((n - 1).bit_length(), 0) if n > 1 else 1
+    if n_pad != n:
+        digests = jnp.concatenate(
+            [digests,
+             jnp.zeros((b, n_pad - n, P2.DIGEST), dtype=jnp.uint32)], axis=1)
+    levels = [digests]
+    while levels[-1].shape[1] > 1:
+        cur = levels[-1]
+        levels.append(P2.compress(cur[:, 0::2], cur[:, 1::2]))
+    return [MerkleTree(levels=[lv[i] for lv in levels]) for i in range(b)]
+
+
 @dataclasses.dataclass
 class MerklePath:
     index: int

@@ -86,6 +86,32 @@ def commit(vec: jnp.ndarray, params: PCSParams) -> Commitment:
     return Commitment(mat=mat, enc=enc, tree=tree, log_r=log_r, log_c=log_c)
 
 
+def commit_batch(vecs: Sequence[jnp.ndarray], params: PCSParams
+                 ) -> List[Commitment]:
+    """Commit a group of equal-length vectors through one vectorized path.
+
+    The RS encode is a single batched NTT over a (B, R, C) stack and the
+    Merkle layer is one batched sponge/compress pass (merkle.commit_batch),
+    so committing all L+1 layer boundaries of a model costs one dispatch
+    sequence instead of L+1.  Each returned Commitment is bit-identical to
+    ``commit(vecs[i], params)``.
+    """
+    if not vecs:
+        return []
+    n = vecs[0].shape[0]
+    assert all(v.shape[0] == n for v in vecs), "commit_batch needs equal lengths"
+    log_r, log_c = shape_for(n)
+    total = 1 << (log_r + log_c)
+    mats = jnp.stack([
+        (jnp.concatenate([v, jnp.zeros((total - n,), jnp.uint32)])
+         if total != n else v).reshape(1 << log_r, 1 << log_c)
+        for v in vecs])                                  # (B, R, C)
+    enc = N.rs_encode(mats, params.blowup)               # (B, R, C*blowup)
+    trees = M.commit_batch(jnp.swapaxes(enc, 1, 2))      # leaves are columns
+    return [Commitment(mat=mats[i], enc=enc[i], tree=trees[i],
+                       log_r=log_r, log_c=log_c) for i in range(len(vecs))]
+
+
 def eval_at(com: Commitment, point: jnp.ndarray) -> jnp.ndarray:
     """Prover-side MLE evaluation (4,) at point (log_r+log_c, 4).
 

@@ -120,9 +120,14 @@ def train(arch: str, train_cfg: TrainCfg, smoke: bool = True,
             (params, opt_state), manifest = ckpt.restore(
                 (params, opt_state), train_cfg.ckpt_dir)
             # restore returns host arrays; place on device (under a real
-            # mesh this is where elastic resharding happens)
-            params = jax.tree_util.tree_map(jnp.asarray, params)
-            opt_state = jax.tree_util.tree_map(jnp.asarray, opt_state)
+            # mesh this is where elastic resharding happens).  Must be an
+            # owning copy: on the CPU backend jnp.asarray aliases the numpy
+            # buffer zero-copy, and step_fn donates these args — donating
+            # an aliased buffer is a use-after-free.
+            params = jax.tree_util.tree_map(
+                lambda x: jnp.array(x, copy=True), params)
+            opt_state = jax.tree_util.tree_map(
+                lambda x: jnp.array(x, copy=True), opt_state)
             start = manifest["step"]
             if "pipeline" in manifest["extra"]:
                 pipeline.restore(manifest["extra"]["pipeline"])

@@ -21,6 +21,7 @@ Three mechanisms, designed for 1000+ node fleets:
 from __future__ import annotations
 
 import dataclasses
+import threading
 import time
 from collections import defaultdict, deque
 from typing import Callable, Dict, List, Optional, Set
@@ -97,28 +98,50 @@ class ProofWorkReplayQueue:
     The paper's layerwise independence makes this trivially correct: a
     layer proof depends only on (weights commit, boundary commits, trace),
     all immutable for a given query.
+
+    Thread-safe: runtime/engine.py drains this queue with a real worker
+    fleet (one thread per prover worker), so claim/complete/worker_lost
+    are serialized under a lock.  ``claims`` and ``losses`` count total
+    claim events and injected/observed worker losses for reporting.
     """
 
     def __init__(self, layer_ids: List[int]):
         self.pending = deque(layer_ids)
         self.in_flight: Dict[str, int] = {}
         self.done: Dict[int, object] = {}
+        self.claims = 0
+        self.losses = 0
+        self._lock = threading.Lock()
 
     def claim(self, worker: str) -> Optional[int]:
-        if not self.pending:
-            return None
-        layer = self.pending.popleft()
-        self.in_flight[worker] = layer
-        return layer
+        got = self.claim_with_seq(worker)
+        return None if got is None else got[0]
+
+    def claim_with_seq(self, worker: str) -> Optional[tuple]:
+        """Claim the next layer, returning (layer, claim_seq) where
+        claim_seq is the global 0-based claim counter — the hook the
+        scheduler's deterministic fault injection keys on."""
+        with self._lock:
+            if not self.pending:
+                return None
+            layer = self.pending.popleft()
+            self.in_flight[worker] = layer
+            seq = self.claims
+            self.claims += 1
+            return layer, seq
 
     def complete(self, worker: str, proof: object):
-        layer = self.in_flight.pop(worker)
-        self.done[layer] = proof
+        with self._lock:
+            layer = self.in_flight.pop(worker)
+            self.done[layer] = proof
 
     def worker_lost(self, worker: str):
-        if worker in self.in_flight:
-            self.pending.appendleft(self.in_flight.pop(worker))
+        with self._lock:
+            if worker in self.in_flight:
+                self.pending.appendleft(self.in_flight.pop(worker))
+                self.losses += 1
 
     @property
     def finished(self) -> bool:
-        return not self.pending and not self.in_flight
+        with self._lock:
+            return not self.pending and not self.in_flight

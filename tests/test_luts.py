@@ -1,7 +1,7 @@
 """Table 1 reproduction: LUT approximation error bounds."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from hypothesis_compat import given, settings, st
 
 from repro.core import luts
 

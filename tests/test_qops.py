@@ -1,7 +1,7 @@
 """Quantized reference ops: semantics + property-based invariants."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from hypothesis_compat import given, settings, st
 
 from repro.core import qops as Q
 from repro.core import quantize as QZ
