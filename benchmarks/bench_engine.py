@@ -5,7 +5,11 @@ proving*; this benchmark measures it on a >=4-layer chain.  Both runs go
 through the identical staged ProverEngine — only the worker count of the
 stage-3 proof fleet differs — and Fiat-Shamir determinism means the
 parallel run's transcripts are bit-identical to the sequential ones
-(asserted here).  Results land in BENCH_engine.json at the repo root:
+(asserted here).  A final scenario drives N queries through ONE resident
+``api.ProofService`` (process backend) and reports cold-vs-warm
+queries/sec: the cold query pays worker spawn + jit + weight range-proof
+setup, the warm ones ride the resident fleet and WeightCommitCache.
+Results land in BENCH_engine.json at the repo root:
 
     PYTHONPATH=src python benchmarks/bench_engine.py [--ci]
 """
@@ -92,6 +96,43 @@ def run(ci: bool = True, layers: int = 4, workers: int = None,
         pickle.dumps(a.tape) == pickle.dumps(p.layer_proofs[i].tape)
         for p in proofs.values()
         for i, a in enumerate(proofs["sequential"].layer_proofs))
+
+    # -- warm-service scenario: N queries through ONE resident ProofService
+    # (the persistent serving daemon: engine + process fleet + weight cache
+    # stay resident, so query 1 pays spawn/jit/setup and the rest don't).
+    from repro import api
+    n_service_queries = 3
+    service_rng = np.random.default_rng(1)
+    svc_queries = [
+        np.clip(np.round(service_rng.normal(0, 0.5,
+                                            (cfg.d_pad, cfg.seq)) * 256),
+                -32768, 32767).astype(np.int64)
+        for _ in range(n_service_queries)]
+    policy = api.VerifyPolicy(pcs_queries=queries)
+    with api.ProofService(cfgs, weights, default_queries=queries,
+                          workers=workers, backend="process") as svc:
+        t0 = time.time()
+        att0 = svc.attest(svc_queries[0], policy)
+        t_cold = time.time() - t0          # spawn + jit warmup + first query
+        t0 = time.time()
+        for q in svc_queries[1:]:
+            svc.attest(q, policy)
+        t_warm = (time.time() - t0) / (n_service_queries - 1)
+    results["service"] = {
+        "backend": "process",
+        "workers": workers,
+        "n_queries": n_service_queries,
+        "cold_first_query_seconds": t_cold,
+        "warm_seconds_per_query": t_warm,
+        "cold_queries_per_sec": 1.0 / t_cold,
+        "warm_queries_per_sec": 1.0 / t_warm,
+        "cold_over_warm": t_cold / t_warm,
+        "attestation_wire_bytes": att0.size_bytes,
+    }
+    print(f"resident ProofService ({workers} process workers): cold "
+          f"{t_cold:.1f}s/query -> warm {t_warm:.1f}s/query "
+          f"({t_cold / t_warm:.2f}x, {1.0 / t_warm:.3f} queries/sec warm)",
+          flush=True)
     # headline: wall-clock scaling of the proving fleet (1 -> N workers,
     # same process-backed architecture).  Also report parallel vs the
     # in-process sequential loop — on a box this small (cpu_count cores)
@@ -114,6 +155,7 @@ def run(ci: bool = True, layers: int = 4, workers: int = None,
         "parallel_threads": results["parallel_threads"],
         "sequential_fleet": results["sequential_fleet"],
         "parallel": results["parallel"],
+        "service": results["service"],
         "speedup": speedup,
         "speedup_vs_inprocess_sequential": speedup_vs_inprocess,
         "identical_transcripts": identical,

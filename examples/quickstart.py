@@ -1,10 +1,12 @@
-"""Quickstart: prove and verify one transformer block (paper Eq. 2).
+"""Quickstart: attest and verify one transformer block over the wire.
 
     PYTHONPATH=src python examples/quickstart.py
 
-Builds a tiny GPT-2-family block, runs the quantized forward (this IS the
-deployed model's layer — qops), commits the boundary activations, then
-generates and verifies the layer proof.
+The whole public surface is ``repro.api``: the provider stands up a
+``ProofService`` (engine fleet + weight-commit cache resident), publishes
+its content-addressed ``ModelCard``, and answers a query with a
+serializable ``Attestation``.  The client holds ONLY the wire bytes, its
+own query, and the card — ``api.verify`` needs no server objects.
 """
 import os
 import sys
@@ -14,49 +16,58 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 import numpy as np
 
+from repro import api
 from repro.core import blocks as B
 from repro.core import chain as CH
-from repro.core import layer_proof as LP
 from repro.core import pcs as PCS
 
 
 def main():
-    params = PCS.PCSParams(blowup=4, queries=16)
     cfg = B.BlockCfg(family="gpt2", d=16, dff=32, heads=2, kv_heads=2,
                      dh=8, seq=8)
     rng = np.random.default_rng(0)
-    weights = B.init_weights(cfg, rng)
+    weights = [B.init_weights(cfg, rng)]
     x = np.clip(np.round(rng.normal(0, 0.5,
                                     (cfg.d_pad, cfg.seq)) * 256),
                 -32768, 32767).astype(np.int64)
+    policy = api.VerifyPolicy(pcs_queries=4)
 
-    print("1. quantized forward (the deployed model's layer)...")
-    y, trace = B.block_forward(cfg, weights, x)
-
-    print("2. setup: weight commitment + amortized range proof...")
+    print("1. provider: stand up the ProofService (weight setup runs "
+          "once, amortized)...")
     t0 = time.time()
-    wt = LP.setup_weights(cfg, weights, params)
-    print(f"   setup {time.time()-t0:.1f}s (amortized across queries)")
+    with api.ProofService([cfg], weights, default_queries=4) as svc:
+        card = svc.model_card
+        print(f"   model card published in {time.time()-t0:.1f}s, "
+              f"id={card.model_id}")
 
-    print("3. boundary commitments (the chain's c_{l-1}, c_l)...")
-    b_in = LP.commit_boundary(cfg, x, params)
-    b_out = LP.commit_boundary(cfg, y, params)
+        print("2. provider: attest the quantized forward of the query...")
+        t0 = time.time()
+        att = svc.attest(x, policy)
+        wire = att.to_bytes()
+        print(f"   proved in {att.prove_seconds:.1f}s — "
+              f"{len(wire)/1024:.0f} KB on the wire "
+              f"({att.bytes_per_layer/1024:.1f} KB/layer encoded)")
 
-    print("4. prove h_l = f_l(h_{l-1}; W_l)...")
+    print("3. client: reload from bytes, verify with only (query, card)...")
+    att2 = api.Attestation.from_bytes(wire)
     t0 = time.time()
-    proof = LP.prove_layer(cfg, 0, wt, b_in, b_out, trace, params)
-    print(f"   proved in {time.time()-t0:.1f}s, "
-          f"{proof.size_bytes()/1024:.0f} KB")
+    report = api.verify(att2, x, card, policy=policy)
+    print(f"   verified={report.ok} in {report.verify_seconds:.1f}s "
+          f"({report.checked_layers} layers)")
+    assert report.ok, report.reason
 
-    print("5. verify...")
-    t0 = time.time()
-    ok = LP.verify_layer(cfg, proof, wt.root, params)
-    print(f"   verified={ok} in {time.time()-t0:.1f}s")
-    assert ok
+    print("4. client: a tampered wire copy is rejected with a reason...")
+    bad = bytearray(wire)
+    bad[len(bad) // 2] ^= 1
+    rej = api.verify(bytes(bad), x, card)
+    print(f"   verified={rej.ok} — {rej.reason}")
+    assert not rej.ok
 
+    params = PCS.PCSParams(blowup=4, queries=policy.pcs_queries)
     rep = CH.soundness_bound([cfg], params)
-    print(f"6. soundness (Thm 3.1 accounting): eps_layer <= "
-          f"2^-{rep.bits_layer:.0f} at DEMO params (queries=16)")
+    print(f"5. soundness (Thm 3.1 accounting): eps_layer <= "
+          f"{min(rep.eps_layer, 1.0):.2g} at SMOKE params (queries=4 — "
+          "demo speed, not security)")
     prod = PCS.PCSParams(blowup=8, queries=128)
     rep2 = CH.soundness_bound([cfg], prod)
     print(f"   production params (blowup=8, queries=128): eps_layer <= "

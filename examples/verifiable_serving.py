@@ -1,15 +1,16 @@
-"""Verifiable serving end-to-end: serve with --with-proof semantics.
+"""Verifiable serving end-to-end on the attestation API.
 
     PYTHONPATH=src python examples/verifiable_serving.py
 
-A 2-layer quantized model serves queries through the staged ProverEngine
-(runtime/engine.py): quantized forward replay, one batched boundary
-commit, then per-layer ProofJobs drained from the replay queue by a
-thread-pool prover fleet (layers are independent given the commitments —
-paper §3.3).  The client verifies, including the Eq. 3 adjacency checks
-and the query binding.  Also demonstrates the WeightCommitCache (the
-paper's setup amortization: the second query skips range-proof setup),
-Fisher-guided selective verification (§5), and mix-and-match rejection.
+A 2-layer quantized model serves queries through a resident
+``ProofService`` (staged ProverEngine + WeightCommitCache, paper §3.3 /
+§4): the provider publishes one content-addressed ``ModelCard``, each
+query returns a serializable ``Attestation``, and the client verifies
+with ``api.verify`` holding nothing but its query and the card —
+including the Eq. 3 adjacency chain and the query binding.  Also
+demonstrates setup amortization across queries, Fisher-guided selective
+verification (§5), and rejection of spliced / replayed / tampered
+attestations, each with a reason string.
 """
 import os
 import sys
@@ -20,12 +21,9 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 import dataclasses
 import numpy as np
 
+from repro import api
 from repro.core import blocks as B
-from repro.core import chain as CH
 from repro.core import fisher as FI
-from repro.core import pcs as PCS
-from repro.launch import serve as SRV
-from repro.runtime.engine import WeightCommitCache
 
 
 def main():
@@ -34,73 +32,88 @@ def main():
     L = 2
     rng = np.random.default_rng(0)
     weights = [B.init_weights(cfg, rng) for _ in range(L)]
-    serve_cfg = SRV.ServeCfg(pcs_queries=8, prove_workers=2)
-    params = PCS.PCSParams(queries=serve_cfg.pcs_queries)
-    cache = WeightCommitCache()
+    imp = np.array([3.0, 1.0])
+    scores = FI.FisherScores(imp, np.ones(L), imp)
+    policy = api.VerifyPolicy(pcs_queries=8)
 
     def query_input():
         return np.clip(np.round(rng.normal(0, 0.5,
                                            (cfg.d_pad, cfg.seq)) * 256),
                        -32768, 32767).astype(np.int64)
 
-    print("client query arrives; provider proves via the staged engine "
-          f"({serve_cfg.prove_workers} prover workers)...")
-    x0 = query_input()
-    t0 = time.time()
-    resp = SRV.prove_query([cfg] * L, weights, None, x0, serve_cfg,
-                           weight_cache=cache)
-    rep = resp.engine_report
-    print(f"full proof ({L} layers) in {time.time()-t0:.1f}s "
-          f"(setup included; commit {rep.commit_seconds:.2f}s, prove "
-          f"{rep.prove_seconds:.1f}s), {resp.proof_bytes/1024:.0f} KB")
+    svc = api.ProofService([cfg] * L, weights, default_queries=8,
+                           workers=2, fisher_scores=scores)
+    cache = svc.weight_cache
+    with svc:
+        print("provider publishes its model card (weight roots + LUT "
+              "digests + PCS rate)...")
+        card = svc.model_card
+        print(f"model_id={card.model_id} ({card.n_layers} layers)")
 
-    roots = resp.model_proof.wt_roots
-    print("client verifies (Eq. 3 adjacency + query binding on its own "
-          "x0)...")
-    t0 = time.time()
-    ok = SRV.verify_response([cfg] * L, resp, roots,
-                             pcs_queries=serve_cfg.pcs_queries, x0=x0)
-    print(f"verified={ok} in {time.time()-t0:.1f}s")
-    assert ok
+        print("\nclient query arrives; provider attests via the resident "
+              f"service ({svc.workers} prover workers)...")
+        x0 = query_input()
+        t0 = time.time()
+        att = svc.attest(x0, policy, tokens=np.arange(5))
+        wire = att.to_bytes()
+        print(f"full attestation ({L} layers) in {time.time()-t0:.1f}s "
+              f"(setup included), {len(wire)/1024:.0f} KB on the wire")
 
-    print("\nsecond query, same model: weight setup amortized "
-          "(WeightCommitCache)...")
-    x1 = query_input()
-    t0 = time.time()
-    resp1 = SRV.prove_query([cfg] * L, weights, None, x1, serve_cfg,
-                            weight_cache=cache)
-    print(f"proved in {time.time()-t0:.1f}s — cache hits "
-          f"{cache.hits}, misses {cache.misses} (range-proof setup ran "
-          "only for query 1)")
-    assert cache.hits == L and cache.misses == L
+        print("client verifies from bytes (Eq. 3 adjacency + query "
+              "binding on its own x0)...")
+        rep = api.verify(wire, x0, card, policy=policy)
+        print(f"verified={rep.ok} in {rep.verify_seconds:.1f}s")
+        assert rep.ok, rep.reason
 
-    print("\nselective verification (paper §5): 50% budget...")
-    imp = np.array([3.0, 1.0])
-    scores = FI.FisherScores(imp, np.ones(L), imp)
-    sel_cfg = dataclasses.replace(serve_cfg, verify_budget=0.5)
-    resp_sel = SRV.prove_query([cfg] * L, weights, None, x1, sel_cfg,
-                               fisher_scores=scores, weight_cache=cache)
-    print(f"proved layers {resp_sel.proved_layers}: coverage "
-          f"{FI.importance_coverage(scores, resp_sel.proved_layers)*100:.0f}%"
-          " of Fisher mass at 50% cost")
+        print("\nsecond query, same model: weight setup amortized "
+              "(WeightCommitCache)...")
+        x1 = query_input()
+        t0 = time.time()
+        att1 = svc.attest(x1, policy)
+        print(f"attested in {time.time()-t0:.1f}s — cache hits "
+              f"{cache.hits}, misses {cache.misses} (range-proof setup "
+              "ran only for query 1)")
+        assert cache.misses == L
 
-    print("\nmix-and-match attack (splice a proof from another query)...")
-    frank_proof = dataclasses.replace(
-        resp.model_proof,
-        layer_proofs=[resp.model_proof.layer_proofs[0],
-                      resp1.model_proof.layer_proofs[1]])
-    frank = dataclasses.replace(resp, model_proof=frank_proof)
-    rejected = not SRV.verify_response([cfg] * L, frank, roots,
-                                       pcs_queries=serve_cfg.pcs_queries)
-    print(f"spliced proof rejected: {rejected}")
-    assert rejected
+        print("\nselective verification (paper §5): 50% budget...")
+        sel = dataclasses.replace(policy, budget=0.5)
+        att_sel = svc.attest(x1, sel)
+        cov = FI.importance_coverage(scores, att_sel.proved_layers)
+        print(f"proved layers {att_sel.proved_layers}: coverage "
+              f"{cov*100:.0f}% of Fisher mass at 50% cost")
+        rep_sel = api.verify(att_sel, x1, card, policy=sel)
+        assert rep_sel.ok, rep_sel.reason
 
-    print("\nquery-binding attack (replay query-1 proof for query 2)...")
-    rebound = not SRV.verify_response([cfg] * L, resp, roots,
-                                      pcs_queries=serve_cfg.pcs_queries,
-                                      x0=x1)
-    print(f"replayed proof rejected: {rebound}")
-    assert rebound
+    print("\nmix-and-match attack (splice a layer proof from another "
+          "query)...")
+    frank = dataclasses.replace(
+        att, proof=dataclasses.replace(
+            att.proof,
+            layer_proofs=[att.proof.layer_proofs[0],
+                          att1.proof.layer_proofs[1]]))
+    rep = api.verify(frank, x0, card)
+    print(f"rejected={not rep.ok} — {rep.reason}")
+    assert not rep.ok
+
+    print("\nquery-binding attack (replay query-1 attestation for "
+          "query 2)...")
+    rep = api.verify(att, x1, card)
+    print(f"rejected={not rep.ok} — {rep.reason}")
+    assert not rep.ok
+
+    print("\nwire tampering (bit flip in transit)...")
+    bad = bytearray(wire)
+    bad[-100] ^= 0x40
+    rep = api.verify(bytes(bad), x0, card)
+    print(f"rejected={not rep.ok} — {rep.reason}")
+    assert not rep.ok
+
+    print("\npolicy downgrade (attacker rewrites pcs_queries)...")
+    weak = dataclasses.replace(
+        att, policy=dataclasses.replace(att.policy, pcs_queries=2))
+    rep = api.verify(weak, x0, card, policy=policy)
+    print(f"rejected={not rep.ok} — {rep.reason}")
+    assert not rep.ok
 
 
 if __name__ == "__main__":

@@ -1,0 +1,26 @@
+"""repro.api — the one public surface for verifiable serving.
+
+Provider side::
+
+    service = ProofService(block_cfgs, weights, default_queries=16)
+    card = service.model_card            # publish once (content-addressed)
+    att = service.attest(x0, VerifyPolicy(budget=0.5, pcs_queries=16))
+    wire = att.to_bytes()                # ship to the client / to disk
+
+Client side (no server objects needed)::
+
+    report = api.verify(wire, x0, card)  # VerifyReport(ok=..., reason=...)
+
+``chain.prove_model`` and ``launch.serve.prove_query`` remain as thin
+deprecated shims over the same engine.
+"""
+from .codec import CodecError, decode_obj, encode_obj, pack, unpack
+from .service import ProofService, select_layers, verify
+from .types import (Attestation, ModelCard, VerifyPolicy, VerifyReport,
+                    lut_table_digests)
+
+__all__ = [
+    "Attestation", "CodecError", "ModelCard", "ProofService",
+    "VerifyPolicy", "VerifyReport", "decode_obj", "encode_obj",
+    "lut_table_digests", "pack", "select_layers", "unpack", "verify",
+]

@@ -1,0 +1,324 @@
+"""Versioned, numpy-aware wire codec for the attestation API.
+
+Proof objects are trees of dataclasses, tuples, dicts, and numpy arrays
+(proof tapes, opening bundles, Merkle paths).  This module gives them a
+deterministic self-describing binary form WITHOUT pickle: every value is
+tagged, arrays carry their exact dtype + shape, and dataclasses are
+encoded by a closed registry of known proof/API types — decoding never
+executes arbitrary code, and a corrupted buffer raises ``CodecError``
+instead of crashing deeper in verification.
+
+Envelope (``pack``/``unpack``): a fixed header
+
+    MAGIC(4) | version(1) | kind(4) | sha256(body)(32) | body_len(8) | body
+
+so any single flipped byte — header or body — is rejected deterministically
+at decode time with a reason, before verification even starts.  The digest
+is an *integrity* check (storage/transit corruption and naive tampering);
+cryptographic soundness against a motivated adversary comes from the proof
+verification itself (``repro.api.verify``).
+
+Determinism matters beyond aesthetics: ``Attestation.size_bytes`` is the
+encoded size (the paper's KB/layer claim, measured on the wire), and
+``ModelCard`` ids are content addresses over this encoding.
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import struct
+from typing import Any, Dict
+
+import numpy as np
+
+MAGIC = b"NZK1"
+VERSION = 1
+
+_U8 = struct.Struct(">B")
+_U32 = struct.Struct(">I")
+_U64 = struct.Struct(">Q")
+_F64 = struct.Struct(">d")
+
+# Byte budget guard: a corrupt length prefix must not trigger a giant
+# allocation before the overrun check fires.
+_MAX_LEN = 1 << 34
+
+
+class CodecError(Exception):
+    """Malformed, truncated, or integrity-failed wire bytes."""
+
+
+# ---------------------------------------------------------------------------
+# Dataclass registry: the closed set of types allowed on the wire.
+# ---------------------------------------------------------------------------
+_REGISTRY: Dict[str, type] = {}
+_REGISTRY_BY_CLS: Dict[type, str] = {}
+
+
+def register(name: str, cls: type) -> None:
+    """Register a dataclass for wire encoding under a stable name."""
+    assert dataclasses.is_dataclass(cls), cls
+    _REGISTRY[name] = cls
+    _REGISTRY_BY_CLS[cls] = name
+
+
+def _register_core_types() -> None:
+    """Stable serializable forms for the proof-system dataclasses."""
+    from repro.core import chain as CH
+    from repro.core import layer_proof as LP
+    from repro.core import lookup as LK
+    from repro.core import merkle as M
+    from repro.core import pcs as PCS
+    from repro.core import sumcheck as SC
+
+    register("pcs.PCSParams", PCS.PCSParams)
+    register("pcs.OpeningBundle", PCS.OpeningBundle)
+    register("merkle.MerklePath", M.MerklePath)
+    register("sumcheck.SumcheckProof", SC.SumcheckProof)
+    register("lookup.LookupProof", LK.LookupProof)
+    register("layer_proof.LayerProof", LP.LayerProof)
+    register("chain.ModelProof", CH.ModelProof)
+
+    from repro.core import blocks as B
+    register("blocks.BlockCfg", B.BlockCfg)
+
+
+_register_core_types()
+
+
+# ---------------------------------------------------------------------------
+# Value encoding (tagged, deterministic).
+# ---------------------------------------------------------------------------
+def _enc_str(out: bytearray, s: str) -> None:
+    b = s.encode("utf-8")
+    out += _U32.pack(len(b))
+    out += b
+
+
+def _enc(out: bytearray, obj: Any) -> None:
+    if obj is None:
+        out += b"N"
+    elif obj is True:
+        out += b"T"
+    elif obj is False:
+        out += b"F"
+    elif isinstance(obj, int):
+        nbytes = max(1, (obj.bit_length() + 8) // 8)
+        out += b"I"
+        out += _U8.pack(nbytes)
+        out += obj.to_bytes(nbytes, "big", signed=True)
+    elif isinstance(obj, float):
+        out += b"f"
+        out += _F64.pack(obj)
+    elif isinstance(obj, str):
+        out += b"S"
+        _enc_str(out, obj)
+    elif isinstance(obj, (bytes, bytearray)):
+        out += b"B"
+        out += _U32.pack(len(obj))
+        out += bytes(obj)
+    elif isinstance(obj, np.generic):
+        a = np.asarray(obj)
+        out += b"G"
+        _enc_str(out, a.dtype.str)
+        out += a.tobytes()
+    elif isinstance(obj, (list, tuple)):
+        out += b"L" if isinstance(obj, list) else b"U"
+        out += _U32.pack(len(obj))
+        for item in obj:
+            _enc(out, item)
+    elif isinstance(obj, dict):
+        out += b"D"
+        out += _U32.pack(len(obj))
+        for k, v in obj.items():
+            assert isinstance(k, str), f"wire dicts need str keys, got {k!r}"
+            _enc_str(out, k)
+            _enc(out, v)
+    elif type(obj) in _REGISTRY_BY_CLS:
+        out += b"C"
+        _enc_str(out, _REGISTRY_BY_CLS[type(obj)])
+        flds = dataclasses.fields(obj)
+        out += _U32.pack(len(flds))
+        for f in flds:
+            _enc_str(out, f.name)
+            _enc(out, getattr(obj, f.name))
+    else:
+        # jnp arrays and anything array-like land here; np.asarray is the
+        # single host-transfer point.
+        try:
+            a = np.asarray(obj)
+        except Exception:
+            raise TypeError(f"not wire-encodable: {type(obj)!r}")
+        if a.dtype == object:
+            raise TypeError(f"not wire-encodable: {type(obj)!r}")
+        if not a.flags["C_CONTIGUOUS"]:
+            # NB: ascontiguousarray only when needed — it promotes 0-d to 1-d
+            a = np.ascontiguousarray(a).reshape(a.shape)
+        out += b"A"
+        _enc_str(out, a.dtype.str)
+        out += _U8.pack(a.ndim)
+        for dim in a.shape:
+            out += _U64.pack(dim)
+        out += a.tobytes()
+
+
+class _Reader:
+    def __init__(self, data: bytes):
+        self.data = data
+        self.pos = 0
+
+    def take(self, n: int) -> bytes:
+        if n < 0 or n > _MAX_LEN or self.pos + n > len(self.data):
+            raise CodecError("buffer overrun")
+        b = self.data[self.pos:self.pos + n]
+        self.pos += n
+        return b
+
+    def u8(self) -> int:
+        return _U8.unpack(self.take(1))[0]
+
+    def u32(self) -> int:
+        return _U32.unpack(self.take(4))[0]
+
+    def u64(self) -> int:
+        return _U64.unpack(self.take(8))[0]
+
+    def string(self) -> str:
+        n = self.u32()
+        try:
+            return self.take(n).decode("utf-8")
+        except UnicodeDecodeError as e:
+            raise CodecError(f"bad utf-8 string: {e}")
+
+
+def _dtype(s: str) -> np.dtype:
+    try:
+        dt = np.dtype(s)
+    except TypeError as e:
+        raise CodecError(f"bad dtype {s!r}: {e}")
+    if dt.hasobject:
+        raise CodecError(f"refusing object dtype {s!r}")
+    return dt
+
+
+def _dec(r: _Reader) -> Any:
+    tag = r.take(1)
+    if tag == b"N":
+        return None
+    if tag == b"T":
+        return True
+    if tag == b"F":
+        return False
+    if tag == b"I":
+        return int.from_bytes(r.take(r.u8()), "big", signed=True)
+    if tag == b"f":
+        return _F64.unpack(r.take(8))[0]
+    if tag == b"S":
+        return r.string()
+    if tag == b"B":
+        return r.take(r.u32())
+    if tag == b"G":
+        dt = _dtype(r.string())
+        if dt.itemsize == 0:
+            raise CodecError(f"zero-itemsize dtype {dt!r}")
+        return np.frombuffer(r.take(dt.itemsize), dtype=dt)[0]
+    if tag in (b"L", b"U"):
+        n = r.u32()
+        items = [_dec(r) for _ in range(n)]
+        return items if tag == b"L" else tuple(items)
+    if tag == b"D":
+        n = r.u32()
+        out = {}
+        for _ in range(n):
+            key = r.string()          # key strictly before value
+            out[key] = _dec(r)
+        return out
+    if tag == b"C":
+        name = r.string()
+        cls = _REGISTRY.get(name)
+        if cls is None:
+            raise CodecError(f"unknown wire type {name!r}")
+        n = r.u32()
+        kwargs = {}
+        for _ in range(n):
+            fname = r.string()        # field name strictly before value
+            kwargs[fname] = _dec(r)
+        try:
+            return cls(**kwargs)
+        except Exception as e:
+            raise CodecError(f"cannot rebuild {name}: {e}")
+    if tag == b"A":
+        dt = _dtype(r.string())
+        if dt.itemsize == 0:
+            raise CodecError(f"zero-itemsize dtype {dt!r}")
+        ndim = r.u8()
+        shape = tuple(r.u64() for _ in range(ndim))
+        count = 1
+        for dim in shape:          # python ints: no int64 overflow wrap
+            count *= dim
+            if count * dt.itemsize > _MAX_LEN:
+                raise CodecError("array too large")
+        raw = r.take(count * dt.itemsize)
+        # copy: frombuffer views are read-only and pin the input buffer
+        return np.frombuffer(raw, dtype=dt).reshape(shape).copy()
+    raise CodecError(f"unknown tag {tag!r}")
+
+
+def encode_obj(obj: Any) -> bytes:
+    out = bytearray()
+    _enc(out, obj)
+    return bytes(out)
+
+
+def decode_obj(data: bytes) -> Any:
+    r = _Reader(data)
+    try:
+        obj = _dec(r)
+    except CodecError:
+        raise
+    except Exception as e:  # hostile bytes must never escape as other types
+        raise CodecError(f"malformed wire data ({type(e).__name__}): {e}")
+    if r.pos != len(data):
+        raise CodecError("trailing bytes after value")
+    return obj
+
+
+def content_digest(obj: Any) -> bytes:
+    """sha256 over the canonical encoding — used for content addressing."""
+    return hashlib.sha256(encode_obj(obj)).digest()
+
+
+# ---------------------------------------------------------------------------
+# Envelope.
+# ---------------------------------------------------------------------------
+_HEADER = len(MAGIC) + 1 + 4 + 32 + 8
+
+
+def pack(kind: bytes, obj: Any) -> bytes:
+    """Serialize ``obj`` with the integrity envelope. ``kind`` is 4 bytes."""
+    assert len(kind) == 4, kind
+    body = encode_obj(obj)
+    return (MAGIC + _U8.pack(VERSION) + kind +
+            hashlib.sha256(body).digest() + _U64.pack(len(body)) + body)
+
+
+def unpack(kind: bytes, data: bytes) -> Any:
+    assert len(kind) == 4, kind
+    if len(data) < _HEADER:
+        raise CodecError("truncated header")
+    if data[:4] != MAGIC:
+        raise CodecError("bad magic (not a NANOZK wire object)")
+    ver = data[4]
+    if ver != VERSION:
+        raise CodecError(f"unsupported wire version {ver}")
+    if data[5:9] != kind:
+        raise CodecError(
+            f"wrong object kind {data[5:9]!r} (expected {kind!r})")
+    digest = data[9:41]
+    (body_len,) = _U64.unpack(data[41:49])
+    body = data[_HEADER:]
+    if len(body) != body_len:
+        raise CodecError("body length mismatch")
+    if hashlib.sha256(body).digest() != digest:
+        raise CodecError("integrity digest mismatch (corrupt or tampered)")
+    return decode_obj(body)

@@ -1,0 +1,325 @@
+"""ProofService (persistent proving facade) + stateless ``verify``.
+
+``ProofService`` is the provider-side daemon object the ROADMAP called
+for: it owns the staged ``ProverEngine``s, the process/thread prover
+fleet, and the ``WeightCommitCache``, and stays resident across queries
+so weight range-proof setup (~the paper's 37 s/layer) and worker
+import+jit warmup are paid once.  ``service.attest(query, policy)``
+returns a serializable ``Attestation``.
+
+``verify(attestation, query, model_card)`` is the client side: a module
+function needing NO server objects — only the query the client itself
+sent and the provider's published ``ModelCard``.  It re-derives c_0 from
+the query (Eq. 3 binding), checks the commitment-chain adjacency, checks
+every layer proof against the card's published weight roots, and NEVER
+raises on malformed input: every failure is a ``VerifyReport`` with a
+reason string.
+"""
+from __future__ import annotations
+
+import time
+from typing import Dict, List, Optional, Sequence, Union
+
+import numpy as np
+
+from repro.core import fisher as FISH
+from repro.core import layer_proof as LP
+from repro.core import pcs as PCS
+from repro.runtime.engine import ProverEngine, WeightCommitCache
+
+from . import codec
+from .types import (Attestation, ModelCard, VerifyPolicy, VerifyReport,
+                    lut_table_digests)
+
+_LUT_DIGEST_CACHE: Optional[Dict[str, bytes]] = None
+
+
+def _local_lut_digests() -> Dict[str, bytes]:
+    global _LUT_DIGEST_CACHE
+    if _LUT_DIGEST_CACHE is None:
+        _LUT_DIGEST_CACHE = lut_table_digests()
+    return _LUT_DIGEST_CACHE
+
+
+def select_layers(policy: VerifyPolicy, n_layers: int,
+                  fisher_scores: Optional[FISH.FisherScores] = None
+                  ) -> List[int]:
+    """Selective-verification layer choice for a policy (paper §5).
+
+    ``audit_random`` adds seed-derived audit layers on top of EVERY
+    partial-budget selector (not just fisher): the seed is public, so
+    the audit set is recomputable by the verifier yet unpredictable to a
+    prover that cannot choose the policy."""
+    if policy.budget >= 1.0:
+        return list(range(n_layers))
+    k = policy.expected_layers(n_layers)
+    extra = min(policy.audit_random, max(0, n_layers - k))
+    if policy.selector == "fisher" and fisher_scores is not None:
+        if extra:
+            return FISH.fisher_plus_random(fisher_scores, k, extra,
+                                           policy.seed)
+        return FISH.select_fisher(fisher_scores, k)
+    if policy.selector == "uniform":
+        base = FISH.select_uniform(n_layers, k)
+        if extra:
+            rest = [i for i in range(n_layers) if i not in set(base)]
+            rng = np.random.default_rng(policy.seed)
+            audit = rng.choice(len(rest), size=min(extra, len(rest)),
+                               replace=False)
+            return sorted(set(base) | {rest[int(i)] for i in audit})
+        return base
+    return FISH.select_random(n_layers, min(n_layers, k + extra),
+                              policy.seed)
+
+
+class ProofService:
+    """Long-lived provider facade: one resident service, many queries.
+
+    Engines are cached per ``pcs_queries`` value (the policy-visible
+    soundness knob); all of them share one ``WeightCommitCache``, so a
+    policy change re-runs range-proof setup at most once per distinct
+    query count.  ``backend="process"`` keeps a spawned worker fleet
+    resident across ``attest`` calls — the serving steady state the
+    benchmarks measure (cold vs warm queries/sec).
+    """
+
+    def __init__(self, block_cfgs: Sequence, weights: Sequence[Dict],
+                 pcs_blowup: int = 4, default_queries: int = 16,
+                 workers: int = 2, backend: str = "thread",
+                 fisher_scores: Optional[FISH.FisherScores] = None,
+                 weight_cache: Optional[WeightCommitCache] = None,
+                 fail_claims=None, name: str = ""):
+        assert len(block_cfgs) == len(weights)
+        self.block_cfgs = list(block_cfgs)
+        self.weights = list(weights)
+        self.pcs_blowup = int(pcs_blowup)
+        self.default_queries = int(default_queries)
+        self.workers = workers
+        self.backend = backend
+        self.fisher_scores = fisher_scores
+        self.fail_claims = fail_claims
+        self.name = name
+        self.weight_cache = (weight_cache if weight_cache is not None
+                             else WeightCommitCache())
+        self._engines: Dict[int, ProverEngine] = {}
+        self._card: Optional[ModelCard] = None
+        self.queries_served = 0
+        self.last_report = None           # EngineReport of the last attest
+
+    # -- lifecycle ----------------------------------------------------------
+    def close(self) -> None:
+        for eng in self._engines.values():
+            eng.close()
+        self._engines.clear()
+
+    def __enter__(self) -> "ProofService":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+    # -- engines ------------------------------------------------------------
+    def engine_for(self, pcs_queries: int) -> ProverEngine:
+        eng = self._engines.get(pcs_queries)
+        if eng is None:
+            params = PCS.PCSParams(blowup=self.pcs_blowup,
+                                   queries=pcs_queries)
+            eng = ProverEngine(self.block_cfgs, self.weights, params,
+                               weight_cache=self.weight_cache,
+                               workers=self.workers,
+                               fail_claims=self.fail_claims,
+                               backend=self.backend)
+            self._engines[pcs_queries] = eng
+        return eng
+
+    # -- published commitment ------------------------------------------------
+    @property
+    def model_card(self) -> ModelCard:
+        """The card the provider publishes (weight setup runs on first use).
+
+        Weight roots are invariant to ``pcs_queries`` (the query count
+        only affects opening sessions), so one card covers every policy.
+        """
+        if self._card is None:
+            eng = self.engine_for(self.default_queries)
+            self._card = ModelCard(
+                arch=tuple(self.block_cfgs),
+                wt_roots=tuple(np.asarray(w.root) for w in eng.wt_commits),
+                lut_digests=_local_lut_digests(),
+                pcs_blowup=self.pcs_blowup,
+                name=self.name)
+        return self._card
+
+    # -- the one prover entry point ------------------------------------------
+    def attest(self, query: np.ndarray,
+               policy: Optional[VerifyPolicy] = None,
+               tokens: Optional[np.ndarray] = None) -> Attestation:
+        """Prove the quantized forward of ``query`` under ``policy``."""
+        if policy is None:
+            policy = VerifyPolicy(pcs_queries=self.default_queries)
+        subset = select_layers(policy, len(self.block_cfgs),
+                               self.fisher_scores)
+        eng = self.engine_for(policy.pcs_queries)
+        t0 = time.monotonic()
+        proof, report = eng.prove(np.asarray(query), layer_subset=subset)
+        dt = time.monotonic() - t0
+        self.queries_served += 1
+        self.last_report = report
+        return Attestation(
+            version=1, model_id=self.model_card.model_id,
+            tokens=(np.asarray(tokens) if tokens is not None
+                    else np.zeros(0, np.int32)),
+            proof=proof, proved_layers=list(subset), policy=policy,
+            prove_seconds=dt)
+
+
+# ---------------------------------------------------------------------------
+# Stateless client-side verification.
+# ---------------------------------------------------------------------------
+def _reject(reason: str, t0: float, **kw) -> VerifyReport:
+    return VerifyReport(ok=False, reason=reason,
+                        verify_seconds=time.monotonic() - t0, **kw)
+
+
+def verify(attestation: Union[Attestation, bytes, bytearray, memoryview],
+           query: Optional[np.ndarray],
+           model_card: Union[ModelCard, bytes, bytearray, memoryview],
+           policy: Optional[VerifyPolicy] = None) -> VerifyReport:
+    """Verify an attestation against the client's own query + model card.
+
+    ``attestation`` / ``model_card`` may be the wire bytes — decoding
+    failures (including any flipped byte, caught by the envelope digest)
+    come back as a clean rejection, not an exception.  ``query`` is the
+    quantized input the client sent; passing ``None`` skips the Eq. 3
+    input binding (adjacency and layer proofs still checked, but a
+    replayed attestation for a different query would not be detected).
+    ``policy``, when given, is the policy the client REQUESTED; an
+    attestation whose embedded policy differs is rejected before any
+    cryptography runs.
+    """
+    t0 = time.monotonic()
+    wire_len = 0
+    if isinstance(attestation, (bytes, bytearray, memoryview)):
+        wire_len = len(attestation)
+        try:
+            attestation = Attestation.from_bytes(bytes(attestation))
+        except codec.CodecError as e:
+            return _reject(f"attestation decode failed: {e}", t0,
+                           attestation_bytes=wire_len)
+    if isinstance(model_card, (bytes, bytearray, memoryview)):
+        try:
+            model_card = ModelCard.from_bytes(bytes(model_card))
+        except codec.CodecError as e:
+            return _reject(f"model card decode failed: {e}", t0)
+
+    # the codec rebuilds dataclasses without type validation, so every
+    # attestation field is attacker-typed until proven otherwise — no
+    # field access outside a guard.
+    try:
+        base = dict(model_id=str(attestation.model_id),
+                    proved_layers=[int(x)
+                                   for x in attestation.proved_layers],
+                    attestation_bytes=wire_len)
+    except Exception as e:
+        return _reject(f"malformed attestation ({type(e).__name__}): {e}",
+                       t0)
+    try:
+        if attestation.version != 1:
+            return _reject(f"unsupported attestation version "
+                           f"{attestation.version}", t0, **base)
+        if not isinstance(attestation.policy, VerifyPolicy):
+            return _reject("attestation carries no policy", t0, **base)
+        if policy is not None and attestation.policy != policy:
+            return _reject("policy mismatch: attestation was produced "
+                           f"under {attestation.policy}, client requested "
+                           f"{policy}", t0, **base)
+        if attestation.model_id != model_card.model_id:
+            return _reject("model id mismatch: attestation is for "
+                           f"{attestation.model_id}, card is "
+                           f"{model_card.model_id}", t0, **base)
+        local_luts = _local_lut_digests()
+        for lname, digest in sorted(model_card.lut_digests.items()):
+            if local_luts.get(lname) != digest:
+                return _reject(f"LUT table digest mismatch for {lname!r}: "
+                               "verifier tables differ from the published "
+                               "card", t0, **base)
+
+        cfgs = list(model_card.arch)
+        L = len(cfgs)
+        proof = attestation.proof
+        pol = attestation.policy
+        params = PCS.PCSParams(blowup=model_card.pcs_blowup,
+                               queries=pol.pcs_queries)
+
+        if len(proof.boundary_roots) != L + 1:
+            return _reject(f"malformed proof: {len(proof.boundary_roots)} "
+                           f"boundary roots for {L} layers", t0, **base)
+        if len(proof.wt_roots) != L or len(model_card.wt_roots) != L:
+            return _reject("malformed proof: weight root count mismatch",
+                           t0, **base)
+        for l in range(L):
+            if not np.array_equal(np.asarray(proof.wt_roots[l]),
+                                  np.asarray(model_card.wt_roots[l])):
+                return _reject(f"published weight root mismatch at layer "
+                               f"{l}: proof does not use the card's "
+                               "committed weights", t0, **base)
+
+        # Eq. 3 query binding: c_0 re-derived from the client's own query.
+        if query is not None:
+            in_root = LP.commit_boundary(cfgs[0], np.asarray(query),
+                                         params).root
+            if not np.array_equal(np.asarray(proof.boundary_roots[0]),
+                                  np.asarray(in_root)):
+                return _reject("query binding failed: attestation's c_0 "
+                               "does not commit the client's query", t0,
+                               **base)
+
+        # Selection accounting before the expensive part.
+        idxs = [lp.layer_index for lp in proof.layer_proofs]
+        if sorted(idxs) != sorted(attestation.proved_layers):
+            return _reject("proved_layers disagrees with the layer proofs",
+                           t0, **base)
+        if len(set(idxs)) != len(idxs):
+            return _reject("duplicate layer proofs", t0, **base)
+        if any(l < 0 or l >= L for l in idxs):
+            return _reject("layer proof index out of range", t0, **base)
+        floor = pol.min_proved_layers(L)   # budget + random audits
+        if len(idxs) < floor:
+            return _reject(f"budget not met: policy requires "
+                           f">= {floor} layers (incl. "
+                           f"{pol.audit_random} random audits), "
+                           f"got {len(idxs)}", t0, **base)
+        if pol.budget < 1.0 and pol.selector in ("uniform", "random"):
+            # deterministic selectors are recomputable from the public
+            # policy — a prover must not get to pick which layers are
+            # audited (paper §5.2's whole point).  Fisher selection
+            # depends on server-side scores, so there only the count is
+            # enforceable client-side.
+            expected = select_layers(pol, L)
+            if sorted(idxs) != sorted(expected):
+                return _reject(f"proved layers {sorted(idxs)} do not "
+                               f"match the policy's {pol.selector} "
+                               f"selection {sorted(expected)}", t0, **base)
+
+        checked = 0
+        for lp in proof.layer_proofs:
+            l = lp.layer_index
+            if not np.array_equal(np.asarray(lp.in_root),
+                                  np.asarray(proof.boundary_roots[l])):
+                return _reject(f"layer {l}: commitment-chain adjacency "
+                               "broken at input (Eq. 3)", t0, **base)
+            if not np.array_equal(np.asarray(lp.out_root),
+                                  np.asarray(proof.boundary_roots[l + 1])):
+                return _reject(f"layer {l}: commitment-chain adjacency "
+                               "broken at output (Eq. 3)", t0, **base)
+            if not LP.verify_layer(cfgs[l], lp, proof.wt_roots[l], params,
+                                   check_input_range=(l == 0)):
+                return _reject(f"layer {l}: proof rejected", t0, **base)
+            checked += 1
+    except Exception as e:  # malformed material must not crash the client
+        return _reject(f"verification error ({type(e).__name__}): {e}",
+                       t0, **base)
+
+    return VerifyReport(ok=True, reason="",
+                        checked_layers=checked,
+                        verify_seconds=time.monotonic() - t0, **base)

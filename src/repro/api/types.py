@@ -1,0 +1,168 @@
+"""Public attestation objects: ModelCard / VerifyPolicy / Attestation.
+
+These three types are the whole trust interface between an untrusting
+client and the serving provider (paper §2):
+
+* ``ModelCard`` — what the provider PUBLISHES once per model: the layer
+  architecture, the weight commitment roots from setup, digests of the
+  LUT tables the circuit semantics depend on, and the PCS rate.  It is
+  content-addressed (``model_id``), so a card cannot silently drift.
+* ``VerifyPolicy`` — what the client REQUESTS per query: verification
+  budget, layer selector, random audit count, and the PCS query count.
+  The policy rides inside the attestation, so prover and verifier can
+  never disagree about ``pcs_queries`` (the drift bug the old
+  ``verify_response(pcs_queries=16)`` default had).
+* ``Attestation`` — what the provider RETURNS: tokens + layer proofs +
+  boundary/weight roots + the policy actually used, with a versioned
+  wire form.  ``api.verify(attestation, query, model_card)`` needs no
+  other server-side object.
+
+Note on tokens: the proof system attests the quantized layer chain
+(h_0 -> h_L) for the bound query; the token array travels under the
+envelope integrity digest but is not itself inside the circuit statement.
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.core import blocks as B
+from repro.core import chain as CH
+from repro.core import luts as LUTS
+
+from . import codec
+
+KIND_CARD = b"CARD"
+KIND_ATTESTATION = b"ATTN"
+
+
+def lut_table_digests() -> Dict[str, bytes]:
+    """sha256 of every published quantized LUT table (circuit semantics)."""
+    return {name: hashlib.sha256(
+                np.ascontiguousarray(LUTS.table_q(name)).tobytes()).digest()
+            for name in sorted(LUTS.ALL_SPECS)}
+
+
+@dataclasses.dataclass(frozen=True)
+class VerifyPolicy:
+    """Client-chosen verification knobs for one query (paper §5)."""
+    budget: float = 1.0          # fraction of layers proven
+    selector: str = "fisher"     # fisher | random | uniform
+    audit_random: int = 0        # extra random audit layers (§5.2)
+    pcs_queries: int = 16        # Ligero spot-check count (soundness knob)
+    seed: int = 0                # selector randomness (public)
+
+    def expected_layers(self, n_layers: int) -> int:
+        """Budget-implied layer count, excluding random audits."""
+        if self.budget >= 1.0:
+            return n_layers
+        return max(1, int(round(self.budget * n_layers)))
+
+    def min_proved_layers(self, n_layers: int) -> int:
+        """Client-enforceable floor on the proved set: budget layers PLUS
+        the random audits — a prover must not get to drop the audit
+        layers (paper §5.2)."""
+        k = self.expected_layers(n_layers)
+        if self.budget >= 1.0:
+            return k
+        return min(n_layers, k + min(self.audit_random,
+                                     max(0, n_layers - k)))
+
+
+@dataclasses.dataclass(eq=False)
+class ModelCard:
+    """Published commitment to a served model (content-addressed)."""
+    arch: Tuple[B.BlockCfg, ...]          # per-layer circuit configs
+    wt_roots: Tuple[np.ndarray, ...]      # setup weight commitment roots
+    lut_digests: Dict[str, bytes]         # LUT table sha256s
+    pcs_blowup: int                       # RS rate 1/blowup (commitment)
+    name: str = ""
+    version: int = 1
+
+    @property
+    def n_layers(self) -> int:
+        return len(self.arch)
+
+    @property
+    def model_id(self) -> str:
+        """Content address over the canonical wire encoding of the card."""
+        body = (self.version, self.name, list(self.arch),
+                [np.asarray(r) for r in self.wt_roots],
+                self.lut_digests, self.pcs_blowup)
+        return codec.content_digest(body)[:16].hex()
+
+    def to_bytes(self) -> bytes:
+        return codec.pack(KIND_CARD, self)
+
+    @classmethod
+    def from_bytes(cls, data: bytes) -> "ModelCard":
+        obj = codec.unpack(KIND_CARD, data)
+        if not isinstance(obj, cls):
+            raise codec.CodecError("wire object is not a ModelCard")
+        return obj
+
+
+codec.register("api.VerifyPolicy", VerifyPolicy)
+codec.register("api.ModelCard", ModelCard)
+
+
+@dataclasses.dataclass(eq=False)
+class Attestation:
+    """One query's verifiable response, in serializable form."""
+    version: int
+    model_id: str
+    tokens: np.ndarray                    # served tokens (see module note)
+    proof: CH.ModelProof                  # layer proofs + c_0..c_L + roots
+    proved_layers: List[int]
+    policy: VerifyPolicy
+    prove_seconds: float = 0.0
+
+    def to_bytes(self) -> bytes:
+        # multi-MB proof trees: cache the encoding (not a dataclass field,
+        # so it never reaches the wire; dataclasses.replace() drops it —
+        # mutate via replace(), not in place, or the cache goes stale)
+        cached = self.__dict__.get("_wire_cache")
+        if cached is None:
+            cached = codec.pack(KIND_ATTESTATION, self)
+            self.__dict__["_wire_cache"] = cached
+        return cached
+
+    @classmethod
+    def from_bytes(cls, data: bytes) -> "Attestation":
+        obj = codec.unpack(KIND_ATTESTATION, data)
+        if not isinstance(obj, cls):
+            raise codec.CodecError("wire object is not an Attestation")
+        # decode->encode is canonical (deterministic codec), so the input
+        # bytes ARE this object's encoding
+        obj.__dict__["_wire_cache"] = bytes(data)
+        return obj
+
+    @property
+    def size_bytes(self) -> int:
+        """ENCODED size — the paper's KB/layer claim, on the wire."""
+        return len(self.to_bytes())
+
+    @property
+    def bytes_per_layer(self) -> float:
+        return self.size_bytes / max(1, len(self.proved_layers))
+
+
+codec.register("api.Attestation", Attestation)
+
+
+@dataclasses.dataclass
+class VerifyReport:
+    """Outcome of ``api.verify``: accept/reject + a human-readable reason."""
+    ok: bool
+    reason: str = ""                      # empty iff ok
+    model_id: str = ""
+    checked_layers: int = 0
+    proved_layers: Optional[List[int]] = None
+    attestation_bytes: int = 0
+    verify_seconds: float = 0.0
+
+    def __bool__(self) -> bool:
+        return self.ok

@@ -44,6 +44,10 @@ def prove_model(cfgs: Sequence[B.BlockCfg],
                 workers: int = 1) -> ModelProof:
     """Run the quantized forward chain and prove every (selected) layer.
 
+    DEPRECATED shim: new callers should use ``repro.api.ProofService``,
+    which keeps the engine + weight cache resident and returns a
+    serializable Attestation.
+
     Thin wrapper over the staged ProverEngine (runtime/engine.py):
     quantized forward replay, one batched PCS commit over all boundary
     activations, then per-layer ProofJobs dispatched across ``workers``

@@ -1,0 +1,407 @@
+"""Attestation API: wire round-trips, tamper evidence, policy routing,
+the ProofService facade, and the legacy-shim drift fix (repro/api/*).
+
+Crypto-bearing fixtures are module-scoped: ONE service + ONE full
+attestation feed every test, so the expensive proving runs once.
+"""
+import dataclasses
+import pickle
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+from repro import api
+from repro.api import codec
+from repro.core import blocks as B
+from repro.core import chain as CH
+from repro.launch import serve as SRV
+
+CFG = B.BlockCfg(family="gpt2", d=16, dff=32, heads=2, kv_heads=2, dh=8,
+                 seq=8)
+L = 2
+QUERIES = 2
+
+
+@pytest.fixture(scope="module")
+def service():
+    rng = np.random.default_rng(3)
+    weights = [B.init_weights(CFG, rng) for _ in range(L)]
+    with api.ProofService([CFG] * L, weights, default_queries=QUERIES,
+                          workers=2, name="test-model") as svc:
+        yield svc
+
+
+@pytest.fixture(scope="module")
+def query():
+    rng = np.random.default_rng(4)
+    return np.clip(np.round(rng.normal(0, 0.5, (CFG.d_pad, CFG.seq)) * 256),
+                   -32768, 32767).astype(np.int64)
+
+
+@pytest.fixture(scope="module")
+def policy():
+    return api.VerifyPolicy(pcs_queries=QUERIES)
+
+
+@pytest.fixture(scope="module")
+def attestation(service, query, policy):
+    return service.attest(query, policy, tokens=np.arange(7, dtype=np.int32))
+
+
+@pytest.fixture(scope="module")
+def wire(attestation):
+    return attestation.to_bytes()
+
+
+# ---------------------------------------------------------------------------
+# Codec (no crypto — fast).
+# ---------------------------------------------------------------------------
+def test_codec_roundtrip_primitives():
+    vals = [None, True, False, 0, -1, 1 << 80, -(1 << 80), 3.5, "héllo",
+            b"\x00\xff", [1, [2, "x"]], (1, (2.0, None)),
+            {"a": 1, "b": [True, b"z"]}]
+    for v in vals:
+        assert codec.decode_obj(codec.encode_obj(v)) == v
+
+
+def test_codec_roundtrip_arrays():
+    arrays = [np.arange(12, dtype=np.uint32).reshape(3, 4),
+              np.array(-5, dtype=np.int64),
+              np.zeros((0, 4), np.uint32),
+              np.linspace(0, 1, 5)]
+    for a in arrays:
+        b = codec.decode_obj(codec.encode_obj(a))
+        assert b.dtype == a.dtype and b.shape == a.shape
+        np.testing.assert_array_equal(a, b)
+    s = codec.decode_obj(codec.encode_obj(np.uint32(7)))
+    assert s == np.uint32(7) and s.dtype == np.uint32
+
+
+def test_codec_rejects_hostile_payloads():
+    import struct
+    # array whose shape product would wrap int64: must be a clean
+    # CodecError, not a ValueError from reshape
+    evil = (b"A" + struct.pack(">I", 3) + b"<u4" + bytes([2]) +
+            struct.pack(">Q", 1 << 32) * 2)
+    with pytest.raises(codec.CodecError):
+        codec.decode_obj(evil)
+    # zero-itemsize scalar dtype
+    evil2 = b"G" + struct.pack(">I", 3) + b"|V0"
+    with pytest.raises(codec.CodecError):
+        codec.decode_obj(evil2)
+
+
+def test_codec_rejects_malformed():
+    with pytest.raises(codec.CodecError):
+        codec.decode_obj(b"Z")                      # unknown tag
+    with pytest.raises(codec.CodecError):
+        codec.decode_obj(codec.encode_obj([1, 2])[:-1])   # truncated
+    with pytest.raises(codec.CodecError):
+        codec.decode_obj(codec.encode_obj(3) + b"!")      # trailing bytes
+    good = codec.pack(b"TEST", {"x": 1})
+    with pytest.raises(codec.CodecError):
+        codec.unpack(b"NOPE", good)                 # wrong kind
+    bad = bytearray(good)
+    bad[-1] ^= 1
+    with pytest.raises(codec.CodecError):
+        codec.unpack(b"TEST", bytes(bad))           # digest mismatch
+    assert codec.unpack(b"TEST", good) == {"x": 1}
+
+
+def test_model_card_content_addressed(service):
+    card = service.model_card
+    clone = api.ModelCard.from_bytes(card.to_bytes())
+    assert clone.model_id == card.model_id
+    renamed = dataclasses.replace(card, name="other")
+    assert renamed.model_id != card.model_id
+    rebudgeted = dataclasses.replace(card, pcs_blowup=8)
+    assert rebudgeted.model_id != card.model_id
+
+
+# ---------------------------------------------------------------------------
+# Round-trip + accept path.
+# ---------------------------------------------------------------------------
+def test_attestation_roundtrip_all_fields(attestation, wire):
+    att = api.Attestation.from_bytes(wire)
+    assert att.version == attestation.version
+    assert att.model_id == attestation.model_id
+    assert att.policy == attestation.policy
+    assert att.proved_layers == attestation.proved_layers
+    np.testing.assert_array_equal(att.tokens, attestation.tokens)
+    for a, b in zip(att.proof.boundary_roots,
+                    attestation.proof.boundary_roots):
+        np.testing.assert_array_equal(a, b)
+    for a, b in zip(att.proof.wt_roots, attestation.proof.wt_roots):
+        np.testing.assert_array_equal(a, b)
+    # canonical-encoding comparison (the originals may hold jnp arrays;
+    # the decoded copy holds np — values, dtypes, shapes must agree)
+    assert codec.encode_obj([lp.tape for lp in att.proof.layer_proofs]) == \
+        codec.encode_obj([lp.tape for lp in attestation.proof.layer_proofs])
+    # reported size is the ENCODED size
+    assert attestation.size_bytes == len(wire)
+    assert attestation.bytes_per_layer == len(wire) / L
+    # decode -> re-encode is canonical (bypassing the wire cache), which
+    # is what lets from_bytes prime the cache with the input bytes
+    from repro.api import types as api_types
+    assert codec.pack(api_types.KIND_ATTESTATION, att) == wire
+
+
+def test_verify_from_wire_accepts(service, query, policy, wire):
+    report = api.verify(wire, query, service.model_card.to_bytes(),
+                        policy=policy)
+    assert report.ok, report.reason
+    assert report.reason == ""
+    assert report.checked_layers == L
+    assert bool(report) is True
+
+
+def test_service_stays_resident(service, query, policy, attestation):
+    # the fixture attest ran; the engine and weight cache are still warm
+    assert service.queries_served >= 1
+    assert service.weight_cache.misses == L      # setup ran exactly once
+    eng = service.engine_for(policy.pcs_queries)
+    assert eng is service.engine_for(policy.pcs_queries)   # cached
+
+
+# ---------------------------------------------------------------------------
+# Tamper evidence: one flipped byte per wire section -> clean rejection.
+# ---------------------------------------------------------------------------
+def _flip_in_section(wire, section_obj, card, query):
+    """Flip one byte inside the encoded span of `section_obj`."""
+    span = codec.encode_obj(section_obj)
+    off = wire.find(span)
+    assert off > 0, "section not found in wire encoding"
+    bad = bytearray(wire)
+    bad[off + len(span) - 1] ^= 0x20       # inside the section payload
+    return api.verify(bytes(bad), query, card)
+
+
+@pytest.mark.parametrize("section", ["tokens", "boundary_root",
+                                     "layer_proof", "policy"])
+def test_byte_flip_each_section_rejected(section, attestation, wire,
+                                         service, query):
+    card = service.model_card
+    obj = {"tokens": lambda a: a.tokens,
+           "boundary_root": lambda a: a.proof.boundary_roots[1],
+           "layer_proof": lambda a: a.proof.layer_proofs[0],
+           "policy": lambda a: a.policy}[section](attestation)
+    report = _flip_in_section(wire, obj, card, query)
+    assert not report.ok
+    assert report.reason                    # human-readable, not a crash
+    assert "decode failed" in report.reason or "digest" in report.reason
+
+
+def test_object_tamper_adjacency_rejected(attestation, service, query, wire):
+    """Re-encoded (digest-consistent) tampering must fail CRYPTO checks."""
+    att = api.Attestation.from_bytes(wire)
+    roots = list(att.proof.boundary_roots)
+    roots[1] = roots[2]
+    bad = dataclasses.replace(
+        att, proof=dataclasses.replace(att.proof, boundary_roots=roots))
+    # round-trip through bytes: the envelope digest is recomputed, so only
+    # the proof system itself can catch this
+    report = api.verify(bad.to_bytes(), query, service.model_card)
+    assert not report.ok
+    assert "adjacency" in report.reason or "Eq. 3" in report.reason
+
+
+def test_object_tamper_tape_rejected(attestation, service, query):
+    att = api.Attestation.from_bytes(attestation.to_bytes())
+    lp = att.proof.layer_proofs[0]
+    tape = list(lp.tape)
+    for i, item in enumerate(tape):
+        if item[0] == "val":
+            v = np.array(item[1]).copy()
+            v.flat[0] ^= 1
+            tape[i] = ("val", v)
+            break
+    bad_lp = dataclasses.replace(lp, tape=tape)
+    proofs = [bad_lp] + list(att.proof.layer_proofs[1:])
+    bad = dataclasses.replace(
+        att, proof=dataclasses.replace(att.proof, layer_proofs=proofs))
+    report = api.verify(bad, query, service.model_card)
+    assert not report.ok
+    assert "layer 0" in report.reason
+
+
+def test_wrong_query_rejected(attestation, service, query):
+    other = query.copy()
+    other[0, 0] += 1
+    report = api.verify(attestation, other, service.model_card)
+    assert not report.ok
+    assert "query" in report.reason
+
+
+def test_wrong_model_card_rejected(attestation, service):
+    card = dataclasses.replace(service.model_card, name="impostor")
+    report = api.verify(attestation, None, card)
+    assert not report.ok
+    assert "model id mismatch" in report.reason
+
+
+# ---------------------------------------------------------------------------
+# Policy / pcs_queries routing (the drift bug).
+# ---------------------------------------------------------------------------
+def test_requested_policy_mismatch_rejected_cheaply(attestation, service,
+                                                    query):
+    asked = api.VerifyPolicy(pcs_queries=QUERIES + 2)
+    report = api.verify(attestation, query, service.model_card,
+                        policy=asked)
+    assert not report.ok
+    assert "policy mismatch" in report.reason
+
+
+def test_tampered_pcs_queries_clean_failure(attestation, service, query):
+    """Attacker rewrites the embedded policy's query count: verification
+    must FAIL with a reason, not crash (the old verify_response would
+    just use its own default and crash or mis-verify)."""
+    att = api.Attestation.from_bytes(attestation.to_bytes())
+    bad = dataclasses.replace(
+        att, policy=dataclasses.replace(att.policy, pcs_queries=QUERIES + 2))
+    report = api.verify(bad, query, service.model_card)
+    assert not report.ok
+    assert report.reason
+
+
+def test_budget_accounting_rejects_underproven(attestation, service, query):
+    att = api.Attestation.from_bytes(attestation.to_bytes())
+    # claim full budget but drop one layer proof
+    pruned = dataclasses.replace(
+        att,
+        proved_layers=[att.proof.layer_proofs[0].layer_index],
+        proof=dataclasses.replace(att.proof,
+                                  layer_proofs=att.proof.layer_proofs[:1]))
+    report = api.verify(pruned, query, service.model_card)
+    assert not report.ok
+    assert "budget" in report.reason
+
+
+def test_malformed_field_types_clean_failure(attestation, service, query):
+    """The codec rebuilds dataclasses without type validation; verify
+    must treat every field as attacker-typed and reject, not crash."""
+    att = api.Attestation.from_bytes(attestation.to_bytes())
+    bad = dataclasses.replace(att, proved_layers=5)       # not a list
+    rep = api.verify(bad, query, service.model_card)
+    assert not rep.ok and "malformed attestation" in rep.reason
+    rep2 = api.verify(object(), query, service.model_card)
+    assert not rep2.ok and rep2.reason
+
+
+def test_deterministic_selector_enforced(attestation, service, query):
+    """A prover must not choose which layers get audited: for the
+    recomputable selectors (uniform/random) the proved subset has to
+    match the policy's own selection (paper §5.2)."""
+    att = api.Attestation.from_bytes(attestation.to_bytes())
+    sel_pol = dataclasses.replace(att.policy, budget=0.5,
+                                  selector="uniform")
+    # uniform selection at L=2, k=1 picks layer 0; prover offers layer 1
+    cheat = dataclasses.replace(
+        att, policy=sel_pol, proved_layers=[1],
+        proof=dataclasses.replace(att.proof,
+                                  layer_proofs=att.proof.layer_proofs[1:]))
+    rep = api.verify(cheat, query, service.model_card)
+    assert not rep.ok
+    assert "selection" in rep.reason
+    # the honest subset for the same policy verifies end-to-end
+    honest = dataclasses.replace(
+        att, policy=sel_pol, proved_layers=[0],
+        proof=dataclasses.replace(att.proof,
+                                  layer_proofs=att.proof.layer_proofs[:1]))
+    rep2 = api.verify(honest, query, service.model_card)
+    assert rep2.ok, rep2.reason
+
+
+def test_audit_layers_enforced(attestation, service, query):
+    """A prover must not drop the policy's random-audit layers: the
+    enforceable floor is budget layers + audits (paper §5.2)."""
+    att = api.Attestation.from_bytes(attestation.to_bytes())
+    pol = dataclasses.replace(att.policy, budget=0.5, audit_random=1)
+    dropped = dataclasses.replace(
+        att, policy=pol, proved_layers=[att.proof.layer_proofs[0].layer_index],
+        proof=dataclasses.replace(att.proof,
+                                  layer_proofs=att.proof.layer_proofs[:1]))
+    rep = api.verify(dropped, query, service.model_card)
+    assert not rep.ok
+    assert "audit" in rep.reason
+
+
+def test_select_layers_audit_applies_to_all_selectors():
+    pol = api.VerifyPolicy(budget=0.5, selector="uniform", audit_random=2,
+                           seed=3)
+    sel = api.select_layers(pol, 8)
+    assert len(sel) == 6 and len(set(sel)) == 6      # k=4 + 2 audits
+    assert api.select_layers(pol, 8) == sel          # seed-recomputable
+    sel_r = api.select_layers(dataclasses.replace(pol, selector="random"), 8)
+    assert len(sel_r) == 6 and len(set(sel_r)) == 6
+    assert pol.min_proved_layers(8) == 6
+
+
+def test_legacy_verify_response_uses_prover_queries(attestation, service,
+                                                    query):
+    """serve.verify_response now defaults to the pcs_queries the PROVER
+    used (carried on the response) instead of a hard-coded 16."""
+    resp = SRV.VerifiableResponse(
+        tokens=np.asarray(attestation.tokens),
+        model_proof=attestation.proof,
+        proved_layers=list(attestation.proved_layers),
+        prove_seconds=0.0, proof_bytes=0,
+        in_root=attestation.proof.boundary_roots[0],
+        out_root=attestation.proof.boundary_roots[-1],
+        pcs_queries=QUERIES)
+    roots = [np.asarray(r) for r in service.model_card.wt_roots]
+    assert SRV.verify_response([CFG] * L, resp, roots, x0=query)
+    # explicit mismatched count -> clean False, not a crash
+    assert not SRV.verify_response([CFG] * L, resp, roots,
+                                   pcs_queries=QUERIES + 2, x0=query)
+
+
+# ---------------------------------------------------------------------------
+# Shim equivalence + fresh-process verification.
+# ---------------------------------------------------------------------------
+def test_shim_prove_model_matches_service(attestation, service, query,
+                                          policy):
+    """chain.prove_model (legacy) and ProofService.attest are the same
+    Fiat-Shamir transcript."""
+    eng = service.engine_for(policy.pcs_queries)
+    legacy = CH.prove_model([CFG] * L, service.weights, eng.wt_commits,
+                            query, eng.params, layer_subset=[0])
+    assert pickle.dumps(legacy.layer_proofs[0].tape) == \
+        pickle.dumps(attestation.proof.layer_proofs[0].tape)
+
+
+def test_fresh_process_verify(attestation, service, query, tmp_path):
+    """Acceptance: write the attestation to disk, reload in a FRESH
+    process holding only (query, model card), verify — and reject a
+    byte-tampered copy."""
+    wire = attestation.to_bytes()
+    att_path = tmp_path / "attestation.bin"
+    att_path.write_bytes(wire)
+    bad = bytearray(wire)
+    bad[len(bad) // 3] ^= 1
+    bad_path = tmp_path / "tampered.bin"
+    bad_path.write_bytes(bytes(bad))
+    (tmp_path / "card.bin").write_bytes(service.model_card.to_bytes())
+    np.save(tmp_path / "query.npy", query)
+
+    prog = (
+        "import numpy as np\n"
+        "from repro import api\n"
+        f"base = {repr(str(tmp_path))}\n"
+        "card = open(base + '/card.bin', 'rb').read()\n"
+        "q = np.load(base + '/query.npy')\n"
+        "good = api.verify(open(base + '/attestation.bin', 'rb').read(), "
+        "q, card)\n"
+        "assert good.ok, good.reason\n"
+        "bad = api.verify(open(base + '/tampered.bin', 'rb').read(), "
+        "q, card)\n"
+        "assert not bad.ok and bad.reason\n"
+        "print('FRESH-PROCESS-OK')\n")
+    import os
+    src = os.path.join(os.path.dirname(__file__), "..", "src")
+    env = dict(os.environ, PYTHONPATH=src)
+    out = subprocess.run([sys.executable, "-c", prog], env=env,
+                         capture_output=True, text=True, timeout=900)
+    assert out.returncode == 0, out.stderr[-2000:]
+    assert "FRESH-PROCESS-OK" in out.stdout
