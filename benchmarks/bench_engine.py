@@ -118,6 +118,9 @@ def run(ci: bool = True, layers: int = 4, workers: int = None,
         for q in svc_queries[1:]:
             svc.attest(q, policy)
         t_warm = (time.time() - t0) / (n_service_queries - 1)
+    wire_v2 = len(att0.to_bytes(2))       # framed + deduplicated (default)
+    wire_v1 = len(att0.to_bytes(1))       # legacy envelope, inline paths
+    n_proved = max(1, len(att0.proved_layers))
     results["service"] = {
         "backend": "process",
         "workers": workers,
@@ -127,8 +130,14 @@ def run(ci: bool = True, layers: int = 4, workers: int = None,
         "cold_queries_per_sec": 1.0 / t_cold,
         "warm_queries_per_sec": 1.0 / t_warm,
         "cold_over_warm": t_cold / t_warm,
-        "attestation_wire_bytes": att0.size_bytes,
+        "attestation_wire_bytes": wire_v2,
+        "attestation_wire_bytes_v1": wire_v1,
+        "wire_kb_per_layer": wire_v2 / n_proved / 1024,
+        "wire_kb_per_layer_v1": wire_v1 / n_proved / 1024,
     }
+    print(f"attestation wire: v2 {wire_v2 / n_proved / 1024:.1f} KB/layer "
+          f"(v1 envelope {wire_v1 / n_proved / 1024:.1f} KB/layer)",
+          flush=True)
     print(f"resident ProofService ({workers} process workers): cold "
           f"{t_cold:.1f}s/query -> warm {t_warm:.1f}s/query "
           f"({t_cold / t_warm:.2f}x, {1.0 / t_warm:.3f} queries/sec warm)",

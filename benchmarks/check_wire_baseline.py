@@ -1,0 +1,74 @@
+"""CI wire-size regression gate.
+
+Compares the encoded attestation KB/layer just measured by
+``benchmarks/bench_engine.py --ci`` (BENCH_engine.json) against the
+committed baseline (``benchmarks/wire_baseline.json``) and exits nonzero
+if the wire size regressed by more than the allowed fraction (default
+10%).  Getting smaller is always fine — run with ``--update`` after an
+intentional wire-format improvement to ratchet the baseline down.
+
+    PYTHONPATH=src python benchmarks/check_wire_baseline.py [--update]
+"""
+import argparse
+import json
+import os
+import sys
+
+ROOT = os.path.join(os.path.dirname(__file__), "..")
+BASELINE = os.path.join(os.path.dirname(__file__), "wire_baseline.json")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--bench", default=os.path.join(ROOT,
+                                                    "BENCH_engine.json"))
+    ap.add_argument("--baseline", default=BASELINE)
+    ap.add_argument("--tolerance", type=float, default=0.10,
+                    help="max allowed fractional regression (default 0.10)")
+    ap.add_argument("--update", action="store_true",
+                    help="rewrite the baseline from the current benchmark")
+    args = ap.parse_args()
+
+    with open(args.bench) as f:
+        bench = json.load(f)
+    svc = bench["service"]
+    current = {
+        "wire_kb_per_layer": svc["wire_kb_per_layer"],
+        "wire_kb_per_layer_v1": svc["wire_kb_per_layer_v1"],
+    }
+    cfg = bench.get("config", {})
+    current["config"] = {k: cfg.get(k) for k in
+                         ("layers", "d", "heads", "seq", "pcs_queries")}
+
+    if args.update or not os.path.exists(args.baseline):
+        with open(args.baseline, "w") as f:
+            json.dump(current, f, indent=1)
+            f.write("\n")
+        print(f"baseline written: {args.baseline} "
+              f"({current['wire_kb_per_layer']:.1f} KB/layer v2)")
+        return 0
+
+    with open(args.baseline) as f:
+        base = json.load(f)
+    if base.get("config") != current["config"]:
+        print(f"wire gate: config changed {base.get('config')} -> "
+              f"{current['config']}; re-baseline with --update")
+        return 1
+
+    failed = False
+    for key in ("wire_kb_per_layer", "wire_kb_per_layer_v1"):
+        allowed = base[key] * (1.0 + args.tolerance)
+        status = "OK" if current[key] <= allowed else "FAIL"
+        failed |= status == "FAIL"
+        print(f"wire gate [{key}]: current {current[key]:.2f} KB/layer, "
+              f"baseline {base[key]:.2f} (allowed <= {allowed:.2f}) "
+              f"{status}")
+    if failed:
+        print("wire size regressed more than "
+              f"{args.tolerance:.0%} over the committed baseline")
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

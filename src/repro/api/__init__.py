@@ -15,12 +15,14 @@ Client side (no server objects needed)::
 deprecated shims over the same engine.
 """
 from .codec import CodecError, decode_obj, encode_obj, pack, unpack
-from .service import ProofService, select_layers, verify
-from .types import (Attestation, ModelCard, VerifyPolicy, VerifyReport,
-                    lut_table_digests)
+from .service import (ProofService, StreamingVerifier, select_layers,
+                      verify)
+from .types import (PROTOCOL_VERSION, Attestation, ModelCard, VerifyPolicy,
+                    VerifyReport, lut_table_digests)
 
 __all__ = [
-    "Attestation", "CodecError", "ModelCard", "ProofService",
-    "VerifyPolicy", "VerifyReport", "decode_obj", "encode_obj",
-    "lut_table_digests", "pack", "select_layers", "unpack", "verify",
+    "Attestation", "CodecError", "ModelCard", "PROTOCOL_VERSION",
+    "ProofService", "StreamingVerifier", "VerifyPolicy", "VerifyReport",
+    "decode_obj", "encode_obj", "lut_table_digests", "pack",
+    "select_layers", "unpack", "verify",
 ]

@@ -24,11 +24,13 @@ import numpy as np
 
 from repro.core import fisher as FISH
 from repro.core import layer_proof as LP
+from repro.core import merkle as MK
 from repro.core import pcs as PCS
 from repro.runtime.engine import ProverEngine, WeightCommitCache
 
 from . import codec
-from .types import (Attestation, ModelCard, VerifyPolicy, VerifyReport,
+from .types import (KIND_ATTESTATION, PROTOCOL_VERSION, Attestation,
+                    ModelCard, VerifyPolicy, VerifyReport,
                     lut_table_digests)
 
 _LUT_DIGEST_CACHE: Optional[Dict[str, bytes]] = None
@@ -166,7 +168,7 @@ class ProofService:
         self.queries_served += 1
         self.last_report = report
         return Attestation(
-            version=1, model_id=self.model_card.model_id,
+            version=PROTOCOL_VERSION, model_id=self.model_card.model_id,
             tokens=(np.asarray(tokens) if tokens is not None
                     else np.zeros(0, np.int32)),
             proof=proof, proved_layers=list(subset), policy=policy,
@@ -175,10 +177,331 @@ class ProofService:
 
 # ---------------------------------------------------------------------------
 # Stateless client-side verification.
+#
+# One code path serves both delivery modes: ``_VerifySession`` holds the
+# pre-layer checks (policy / card / query binding / selection accounting),
+# the per-layer check, and the final accounting.  One-shot ``verify``
+# drives the session over a decoded object; ``StreamingVerifier`` drives
+# the SAME session frame by frame as v2 wire chunks arrive, so the two
+# verdicts are identical by construction.
 # ---------------------------------------------------------------------------
 def _reject(reason: str, t0: float, **kw) -> VerifyReport:
     return VerifyReport(ok=False, reason=reason,
                         verify_seconds=time.monotonic() - t0, **kw)
+
+
+class _VerifySession:
+    """Verification state machine shared by one-shot and streaming modes.
+
+    ``head(info)`` runs every check that needs no layer proof; ``layer(lp,
+    stores)`` verifies one layer the moment it is available; ``final()``
+    closes the accounting.  ``head``/``layer`` return a rejection
+    ``VerifyReport`` (and latch it) or None; all input is treated as
+    attacker-typed — malformed material rejects, never raises.
+    """
+
+    def __init__(self, query, model_card, req_policy,
+                 t0: Optional[float] = None,
+                 wire_version: Optional[int] = None):
+        self.t0 = time.monotonic() if t0 is None else t0
+        self.query = query
+        self.card = model_card
+        self.req_policy = req_policy
+        self.wire_version = wire_version   # None: object never hit the wire
+        self.base: Dict = dict(attestation_bytes=0)
+        self.cfgs: List = []
+        self.params: Optional[PCS.PCSParams] = None
+        self.boundary_roots: List = []
+        self.proved: set = set()
+        self.seen: set = set()
+        self.checked = 0
+        self.report: Optional[VerifyReport] = None
+        self._head_ok = False
+
+    def _reject(self, reason: str) -> VerifyReport:
+        self.report = _reject(reason, self.t0, **self.base)
+        return self.report
+
+    def progress(self) -> VerifyReport:
+        """Interim accept-so-far snapshot (streaming progress)."""
+        return VerifyReport(ok=True, reason="", complete=False,
+                            checked_layers=self.checked,
+                            verify_seconds=time.monotonic() - self.t0,
+                            **self.base)
+
+    # -- pre-layer checks ---------------------------------------------------
+    def head(self, info: Dict) -> Optional[VerifyReport]:
+        """``info``: attestation metadata (the v2 HEAD frame body) —
+        version / model_id / proved_layers / policy / prove_seconds /
+        boundary_roots / wt_roots."""
+        if self.report is not None:
+            return self.report
+        try:
+            base_bytes = self.base.get("attestation_bytes", 0)
+            self.base = dict(model_id=str(info["model_id"]),
+                             proved_layers=[int(x)
+                                            for x in info["proved_layers"]],
+                             attestation_bytes=base_bytes)
+        except Exception as e:
+            return self._reject(
+                f"malformed attestation ({type(e).__name__}): {e}")
+        try:
+            return self._head_checks(info)
+        except Exception as e:  # hostile metadata must not crash the client
+            return self._reject(
+                f"verification error ({type(e).__name__}): {e}")
+
+    def _head_checks(self, info: Dict) -> Optional[VerifyReport]:
+        version = info["version"]
+        pol = info["policy"]
+        if version != PROTOCOL_VERSION:
+            return self._reject(
+                f"unsupported attestation version {version}")
+        if not isinstance(pol, VerifyPolicy):
+            return self._reject("attestation carries no policy")
+        if self.req_policy is not None and pol != self.req_policy:
+            return self._reject(
+                "policy mismatch: attestation was produced under "
+                f"{pol}, client requested {self.req_policy}")
+        min_wire = getattr(pol, "min_wire_version", 1)
+        if self.wire_version is not None and self.wire_version < min_wire:
+            return self._reject(
+                f"wire container v{self.wire_version} below the policy "
+                f"minimum v{min_wire}")
+        if not isinstance(self.card, ModelCard):
+            return self._reject("model card unavailable")
+        if info["model_id"] != self.card.model_id:
+            return self._reject(
+                f"model id mismatch: attestation is for "
+                f"{info['model_id']}, card is {self.card.model_id}")
+        local_luts = _local_lut_digests()
+        for lname, digest in sorted(self.card.lut_digests.items()):
+            if local_luts.get(lname) != digest:
+                return self._reject(
+                    f"LUT table digest mismatch for {lname!r}: verifier "
+                    "tables differ from the published card")
+
+        cfgs = list(self.card.arch)
+        L = len(cfgs)
+        params = PCS.PCSParams(blowup=self.card.pcs_blowup,
+                               queries=pol.pcs_queries)
+        boundary_roots = list(info["boundary_roots"])
+        wt_roots = list(info["wt_roots"])
+        if len(boundary_roots) != L + 1:
+            return self._reject(
+                f"malformed proof: {len(boundary_roots)} boundary roots "
+                f"for {L} layers")
+        if len(wt_roots) != L or len(self.card.wt_roots) != L:
+            return self._reject(
+                "malformed proof: weight root count mismatch")
+        for l in range(L):
+            if not np.array_equal(np.asarray(wt_roots[l]),
+                                  np.asarray(self.card.wt_roots[l])):
+                return self._reject(
+                    f"published weight root mismatch at layer {l}: proof "
+                    "does not use the card's committed weights")
+
+        # Eq. 3 query binding: c_0 re-derived from the client's own query.
+        if self.query is not None:
+            in_root = LP.commit_boundary(cfgs[0], np.asarray(self.query),
+                                         params).root
+            if not np.array_equal(np.asarray(boundary_roots[0]),
+                                  np.asarray(in_root)):
+                return self._reject(
+                    "query binding failed: attestation's c_0 does not "
+                    "commit the client's query")
+
+        # Selection accounting before any expensive layer work.
+        idxs = self.base["proved_layers"]
+        if len(set(idxs)) != len(idxs):
+            return self._reject("duplicate layer proofs")
+        if any(l < 0 or l >= L for l in idxs):
+            return self._reject("layer proof index out of range")
+        floor = pol.min_proved_layers(L)   # budget + random audits
+        if len(idxs) < floor:
+            return self._reject(
+                f"budget not met: policy requires >= {floor} layers "
+                f"(incl. {pol.audit_random} random audits), "
+                f"got {len(idxs)}")
+        if pol.budget < 1.0 and pol.selector in ("uniform", "random"):
+            # deterministic selectors are recomputable from the public
+            # policy — a prover must not get to pick which layers are
+            # audited (paper §5.2's whole point).  Fisher selection
+            # depends on server-side scores, so there only the count is
+            # enforceable client-side.
+            expected = select_layers(pol, L)
+            if sorted(idxs) != sorted(expected):
+                return self._reject(
+                    f"proved layers {sorted(idxs)} do not match the "
+                    f"policy's {pol.selector} selection "
+                    f"{sorted(expected)}")
+
+        self.cfgs = cfgs
+        self.params = params
+        self.boundary_roots = boundary_roots
+        self.proved = set(idxs)
+        self._head_ok = True
+        return None
+
+    # -- per-layer check ----------------------------------------------------
+    def layer(self, lp, stores) -> Optional[VerifyReport]:
+        """Verify one layer proof; ``stores`` is the per-root multiproof
+        list for this layer ([] when column openings are inline)."""
+        if self.report is not None:
+            return self.report
+        if not self._head_ok:
+            return self._reject("layer proof before attestation head")
+        try:
+            return self._layer_checks(lp, stores)
+        except Exception as e:  # malformed proofs must not crash the client
+            return self._reject(
+                f"verification error ({type(e).__name__}): {e}")
+
+    def _layer_checks(self, lp, stores) -> Optional[VerifyReport]:
+        l = int(lp.layer_index)
+        if l not in self.proved:
+            return self._reject(
+                "proved_layers disagrees with the layer proofs")
+        if l in self.seen:
+            return self._reject("duplicate layer proofs")
+        self.seen.add(l)
+        if not np.array_equal(np.asarray(lp.in_root),
+                              np.asarray(self.boundary_roots[l])):
+            return self._reject(
+                f"layer {l}: commitment-chain adjacency broken at input "
+                "(Eq. 3)")
+        if not np.array_equal(np.asarray(lp.out_root),
+                              np.asarray(self.boundary_roots[l + 1])):
+            return self._reject(
+                f"layer {l}: commitment-chain adjacency broken at output "
+                "(Eq. 3)")
+        store = None
+        if stores:
+            store = PCS.ColumnStore()
+            for ent in stores:
+                if (not isinstance(ent, (tuple, list)) or len(ent) != 2
+                        or not isinstance(ent[1], MK.MerkleMultiProof)):
+                    return self._reject(
+                        f"layer {l}: malformed column store entry")
+                root, mp = ent
+                if not MK.verify_multiproof(np.asarray(root), mp):
+                    return self._reject(
+                        f"layer {l}: column multiproof rejected (root "
+                        "mismatch or non-canonical node set)")
+                store.add_root(np.asarray(root), mp.indices, mp.leaves)
+        if not LP.verify_layer(self.cfgs[l], lp, self.card.wt_roots[l],
+                               self.params, check_input_range=(l == 0),
+                               store=store):
+            return self._reject(f"layer {l}: proof rejected")
+        self.checked += 1
+        return None
+
+    # -- final accounting ---------------------------------------------------
+    def final(self) -> VerifyReport:
+        if self.report is not None:
+            return self.report
+        if not self._head_ok:
+            return self._reject("attestation head missing")
+        if self.seen != self.proved:
+            return self._reject(
+                "proved_layers disagrees with the layer proofs")
+        self.report = VerifyReport(
+            ok=True, reason="", checked_layers=self.checked,
+            verify_seconds=time.monotonic() - self.t0, **self.base)
+        return self.report
+
+
+class StreamingVerifier:
+    """Incremental verifier for a v2 framed attestation stream.
+
+    Feed wire chunks as they arrive; each completed LAYR frame is
+    verified the moment its bytes are in (layer k checked while layer
+    k+1 is still in flight).  ``feed`` returns interim ``VerifyReport``
+    snapshots (``complete=False``) after each verified layer, or the
+    final (latched) rejection; ``finish`` returns the final verdict.
+    Malformed, truncated, reordered, or tampered streams come back as
+    reasoned rejections — never exceptions.
+    """
+
+    def __init__(self, query: Optional[np.ndarray],
+                 model_card: Union[ModelCard, bytes, bytearray, memoryview],
+                 policy: Optional[VerifyPolicy] = None):
+        t0 = time.monotonic()
+        card_err = None
+        if isinstance(model_card, (bytes, bytearray, memoryview)):
+            try:
+                model_card = ModelCard.from_bytes(bytes(model_card))
+            except codec.CodecError as e:
+                card_err = f"model card decode failed: {e}"
+                model_card = None
+        self.session = _VerifySession(query, model_card, policy, t0=t0,
+                                      wire_version=2)
+        self.reader = codec.FrameReader(KIND_ATTESTATION)
+        self.fed = 0
+        self.final_report: Optional[VerifyReport] = None
+        if card_err is not None:
+            self.final_report = self.session._reject(card_err)
+
+    def feed(self, chunk) -> List[VerifyReport]:
+        if self.final_report is not None:
+            return []
+        self.fed += len(chunk)
+        self.session.base["attestation_bytes"] = self.fed
+        try:
+            frames = self.reader.feed(bytes(chunk))
+        except codec.CodecError as e:
+            self.final_report = self.session._reject(
+                f"attestation stream rejected: {e}")
+            return [self.final_report]
+        out: List[VerifyReport] = []
+        for fkind, obj in frames:
+            rep = self._frame(fkind, obj)
+            if rep is not None:
+                out.append(rep)
+            if self.final_report is not None:
+                break
+        return out
+
+    def _frame(self, fkind, obj) -> Optional[VerifyReport]:
+        from . import types as _T
+        sess = self.session
+        if fkind == codec.FRAME_HEAD:
+            if not isinstance(obj, dict):
+                self.final_report = sess._reject("malformed HEAD frame")
+                return self.final_report
+            rep = sess.head(obj)
+            if rep is not None:
+                self.final_report = rep
+                return rep
+            return sess.progress()
+        if fkind == codec.FRAME_LAYER:
+            try:
+                lp, stores = _T._layer_from_frame(obj)
+            except codec.CodecError as e:
+                self.final_report = sess._reject(f"bad LAYR frame: {e}")
+                return self.final_report
+            rep = sess.layer(lp, stores)
+            if rep is not None:
+                self.final_report = rep
+                return rep
+            return sess.progress()
+        if fkind == codec.FRAME_END:
+            self.final_report = sess.final()
+            return self.final_report
+        self.final_report = sess._reject(
+            f"unexpected frame kind {fkind!r}")
+        return self.final_report
+
+    def finish(self) -> VerifyReport:
+        if self.final_report is None:
+            try:
+                self.reader.finish()
+            except codec.CodecError as e:
+                self.final_report = self.session._reject(
+                    f"attestation stream rejected: {e}")
+            else:   # reader done but no END routed (cannot happen)
+                self.final_report = self.session.final()
+        return self.final_report
 
 
 def verify(attestation: Union[Attestation, bytes, bytearray, memoryview],
@@ -188,9 +511,11 @@ def verify(attestation: Union[Attestation, bytes, bytearray, memoryview],
     """Verify an attestation against the client's own query + model card.
 
     ``attestation`` / ``model_card`` may be the wire bytes — decoding
-    failures (including any flipped byte, caught by the envelope digest)
-    come back as a clean rejection, not an exception.  ``query`` is the
-    quantized input the client sent; passing ``None`` skips the Eq. 3
+    failures (including any flipped byte, caught by the envelope/frame
+    digests) come back as a clean rejection, not an exception.  v2 framed
+    bytes route through :class:`StreamingVerifier` fed in one shot, so
+    one-shot and chunked verification share every check.  ``query`` is
+    the quantized input the client sent; passing ``None`` skips the Eq. 3
     input binding (adjacency and layer proofs still checked, but a
     replayed attestation for a different query would not be detected).
     ``policy``, when given, is the policy the client REQUESTED; an
@@ -198,128 +523,61 @@ def verify(attestation: Union[Attestation, bytes, bytearray, memoryview],
     cryptography runs.
     """
     t0 = time.monotonic()
-    wire_len = 0
-    if isinstance(attestation, (bytes, bytearray, memoryview)):
-        wire_len = len(attestation)
-        try:
-            attestation = Attestation.from_bytes(bytes(attestation))
-        except codec.CodecError as e:
-            return _reject(f"attestation decode failed: {e}", t0,
-                           attestation_bytes=wire_len)
     if isinstance(model_card, (bytes, bytearray, memoryview)):
         try:
             model_card = ModelCard.from_bytes(bytes(model_card))
         except codec.CodecError as e:
             return _reject(f"model card decode failed: {e}", t0)
 
+    wire_len = 0
+    wire_version = None
+    if isinstance(attestation, (bytes, bytearray, memoryview)):
+        data = bytes(attestation)
+        if codec.sniff_version(data) == 2:
+            sv = StreamingVerifier(query, model_card, policy)
+            sv.feed(data)
+            return sv.finish()
+        wire_len = len(data)
+        wire_version = 1
+        try:
+            attestation = Attestation.from_bytes(data)
+        except codec.CodecError as e:
+            return _reject(f"attestation decode failed: {e}", t0,
+                           attestation_bytes=wire_len)
+    elif isinstance(attestation, Attestation):
+        wire_version = attestation.__dict__.get("_wire_version")
+
+    sess = _VerifySession(query, model_card, policy, t0=t0,
+                          wire_version=wire_version)
+    sess.base["attestation_bytes"] = wire_len
+
     # the codec rebuilds dataclasses without type validation, so every
     # attestation field is attacker-typed until proven otherwise — no
     # field access outside a guard.
     try:
-        base = dict(model_id=str(attestation.model_id),
-                    proved_layers=[int(x)
-                                   for x in attestation.proved_layers],
-                    attestation_bytes=wire_len)
+        info = dict(version=attestation.version,
+                    model_id=attestation.model_id,
+                    proved_layers=attestation.proved_layers,
+                    policy=attestation.policy,
+                    boundary_roots=attestation.proof.boundary_roots,
+                    wt_roots=attestation.proof.wt_roots)
     except Exception as e:
-        return _reject(f"malformed attestation ({type(e).__name__}): {e}",
-                       t0)
+        return sess._reject(
+            f"malformed attestation ({type(e).__name__}): {e}")
+    rep = sess.head(info)
+    if rep is not None:
+        return rep
     try:
-        if attestation.version != 1:
-            return _reject(f"unsupported attestation version "
-                           f"{attestation.version}", t0, **base)
-        if not isinstance(attestation.policy, VerifyPolicy):
-            return _reject("attestation carries no policy", t0, **base)
-        if policy is not None and attestation.policy != policy:
-            return _reject("policy mismatch: attestation was produced "
-                           f"under {attestation.policy}, client requested "
-                           f"{policy}", t0, **base)
-        if attestation.model_id != model_card.model_id:
-            return _reject("model id mismatch: attestation is for "
-                           f"{attestation.model_id}, card is "
-                           f"{model_card.model_id}", t0, **base)
-        local_luts = _local_lut_digests()
-        for lname, digest in sorted(model_card.lut_digests.items()):
-            if local_luts.get(lname) != digest:
-                return _reject(f"LUT table digest mismatch for {lname!r}: "
-                               "verifier tables differ from the published "
-                               "card", t0, **base)
-
-        cfgs = list(model_card.arch)
-        L = len(cfgs)
-        proof = attestation.proof
-        pol = attestation.policy
-        params = PCS.PCSParams(blowup=model_card.pcs_blowup,
-                               queries=pol.pcs_queries)
-
-        if len(proof.boundary_roots) != L + 1:
-            return _reject(f"malformed proof: {len(proof.boundary_roots)} "
-                           f"boundary roots for {L} layers", t0, **base)
-        if len(proof.wt_roots) != L or len(model_card.wt_roots) != L:
-            return _reject("malformed proof: weight root count mismatch",
-                           t0, **base)
-        for l in range(L):
-            if not np.array_equal(np.asarray(proof.wt_roots[l]),
-                                  np.asarray(model_card.wt_roots[l])):
-                return _reject(f"published weight root mismatch at layer "
-                               f"{l}: proof does not use the card's "
-                               "committed weights", t0, **base)
-
-        # Eq. 3 query binding: c_0 re-derived from the client's own query.
-        if query is not None:
-            in_root = LP.commit_boundary(cfgs[0], np.asarray(query),
-                                         params).root
-            if not np.array_equal(np.asarray(proof.boundary_roots[0]),
-                                  np.asarray(in_root)):
-                return _reject("query binding failed: attestation's c_0 "
-                               "does not commit the client's query", t0,
-                               **base)
-
-        # Selection accounting before the expensive part.
-        idxs = [lp.layer_index for lp in proof.layer_proofs]
-        if sorted(idxs) != sorted(attestation.proved_layers):
-            return _reject("proved_layers disagrees with the layer proofs",
-                           t0, **base)
-        if len(set(idxs)) != len(idxs):
-            return _reject("duplicate layer proofs", t0, **base)
-        if any(l < 0 or l >= L for l in idxs):
-            return _reject("layer proof index out of range", t0, **base)
-        floor = pol.min_proved_layers(L)   # budget + random audits
-        if len(idxs) < floor:
-            return _reject(f"budget not met: policy requires "
-                           f">= {floor} layers (incl. "
-                           f"{pol.audit_random} random audits), "
-                           f"got {len(idxs)}", t0, **base)
-        if pol.budget < 1.0 and pol.selector in ("uniform", "random"):
-            # deterministic selectors are recomputable from the public
-            # policy — a prover must not get to pick which layers are
-            # audited (paper §5.2's whole point).  Fisher selection
-            # depends on server-side scores, so there only the count is
-            # enforceable client-side.
-            expected = select_layers(pol, L)
-            if sorted(idxs) != sorted(expected):
-                return _reject(f"proved layers {sorted(idxs)} do not "
-                               f"match the policy's {pol.selector} "
-                               f"selection {sorted(expected)}", t0, **base)
-
-        checked = 0
-        for lp in proof.layer_proofs:
-            l = lp.layer_index
-            if not np.array_equal(np.asarray(lp.in_root),
-                                  np.asarray(proof.boundary_roots[l])):
-                return _reject(f"layer {l}: commitment-chain adjacency "
-                               "broken at input (Eq. 3)", t0, **base)
-            if not np.array_equal(np.asarray(lp.out_root),
-                                  np.asarray(proof.boundary_roots[l + 1])):
-                return _reject(f"layer {l}: commitment-chain adjacency "
-                               "broken at output (Eq. 3)", t0, **base)
-            if not LP.verify_layer(cfgs[l], lp, proof.wt_roots[l], params,
-                                   check_input_range=(l == 0)):
-                return _reject(f"layer {l}: proof rejected", t0, **base)
-            checked += 1
-    except Exception as e:  # malformed material must not crash the client
-        return _reject(f"verification error ({type(e).__name__}): {e}",
-                       t0, **base)
-
-    return VerifyReport(ok=True, reason="",
-                        checked_layers=checked,
-                        verify_seconds=time.monotonic() - t0, **base)
+        layer_proofs = list(attestation.proof.layer_proofs)
+        stores = attestation.layer_stores() \
+            if isinstance(attestation, Attestation) else None
+        if stores is not None and len(stores) != len(layer_proofs):
+            return sess._reject("column store / layer proof count mismatch")
+    except Exception as e:
+        return sess._reject(
+            f"malformed attestation ({type(e).__name__}): {e}")
+    for k, lp in enumerate(layer_proofs):
+        rep = sess.layer(lp, stores[k] if stores is not None else [])
+        if rep is not None:
+            return rep
+    return sess.final()

@@ -154,6 +154,7 @@ class _Ctx:
         self.roots: Dict[str, np.ndarray] = {}
         self.shapes: Dict[str, Tuple[int, int]] = {}   # name -> (log_r, log_c)
         self._claim_cache: Dict[Tuple, np.ndarray] = {}
+        self.lookups: List["LookupReq"] = []           # deferred LogUp work
 
     # -- leaf claims --------------------------------------------------------
     def _leaf_claim(self, com: str, point: jnp.ndarray) -> jnp.ndarray:
@@ -239,6 +240,15 @@ class ProverCtx(_Ctx):
         self.tape.append(("root", name, com.root))
         self.tr.absorb(jnp.asarray(com.root))
 
+    def commit_field(self, name: str, fvec: jnp.ndarray, aspect: int = 0):
+        """Commit a field-valued vector (already Montgomery uint32)."""
+        com = PCS.commit(jnp.asarray(fvec), self.params, aspect)
+        self.coms[name] = com
+        self.roots[name] = com.root
+        self.shapes[name] = (com.log_r, com.log_c)
+        self.tape.append(("root", name, com.root))
+        self.tr.absorb(jnp.asarray(com.root))
+
     def attach(self, name: str, com: PCS.Commitment, ints: np.ndarray):
         """Attach an externally-created commitment (boundary/weights)."""
         self.coms[name] = com
@@ -286,6 +296,7 @@ class ProverCtx(_Ctx):
 
     def finalize(self) -> List:
         """Batch-open every commitment at its accumulated claim points."""
+        assert not self.lookups, "finalize with pending lookups — call flush_lookups first"
         for name in self.claims:
             points = [jnp.asarray(p) for p, _ in self.claims[name]]
             bundle = PCS.prove_openings(self.coms[name], points, self.tr,
@@ -297,10 +308,12 @@ class ProverCtx(_Ctx):
 class VerifierCtx(_Ctx):
     is_prover = False
 
-    def __init__(self, transcript, params, tape: List):
+    def __init__(self, transcript, params, tape: List,
+                 store: Optional[PCS.ColumnStore] = None):
         super().__init__(transcript, params)
         self.tape = tape
         self.cursor = 0
+        self.store = store
 
     def _next(self, kind: str):
         if self.cursor >= len(self.tape):
@@ -318,6 +331,15 @@ class VerifierCtx(_Ctx):
         total = 1 << max((n_elems - 1).bit_length(), 0) if n_elems > 1 else 1
         self.roots[name] = root
         self.shapes[name] = PCS.shape_for(total)
+        self.tr.absorb(jnp.asarray(root))
+
+    def commit_field(self, name: str, n_elems: int, aspect: int = 0):
+        _, got_name, root = self._next("root")
+        if got_name != name:
+            raise ProofError(f"commitment order mismatch: {got_name}!={name}")
+        total = 1 << max((n_elems - 1).bit_length(), 0) if n_elems > 1 else 1
+        self.roots[name] = root
+        self.shapes[name] = PCS.shape_for(total, aspect)
         self.tr.absorb(jnp.asarray(root))
 
     def attach(self, name: str, root: np.ndarray, n_elems: int):
@@ -341,6 +363,8 @@ class VerifierCtx(_Ctx):
         return v
 
     def finalize(self):
+        if self.lookups:
+            raise ProofError("finalize with pending lookups")
         for name in self.claims:
             _, got_name, bundle = self._next("open")
             if got_name != name:
@@ -349,7 +373,7 @@ class VerifierCtx(_Ctx):
             values = [jnp.asarray(v) for _, v in self.claims[name]]
             ok = PCS.verify_openings(self.roots[name], *self.shapes[name],
                                      points, values, bundle, self.tr,
-                                     self.params)
+                                     self.params, store=self.store)
             if not ok:
                 raise ProofError(f"PCS opening failed for {name}")
         if self.cursor != len(self.tape):
@@ -362,22 +386,22 @@ Ctx = Union[ProverCtx, VerifierCtx]
 # ---------------------------------------------------------------------------
 # Gadgets. Each runs identically on both sides; prover writes tape values.
 # ---------------------------------------------------------------------------
+def _half_point(m: int) -> jnp.ndarray:
+    """The point (1/2, ..., 1/2) in Fp4 — see g_sum."""
+    if m == 0:
+        return jnp.zeros((0, 4), jnp.uint32)
+    return jnp.broadcast_to(_fc(INV2), (m, 4))
+
+
 def g_sum(ctx: Ctx, v: View) -> jnp.ndarray:
-    """Returns S with proof that S = sum_z v(z)."""
-    if ctx.is_prover:
-        vec = F.f4_from_base(ctx.materialize(v))
-        s = ctx.put_value(fsum(vec, axis=0))
-        proof, rho = SC.prove([vec], ctx.tr)
-        ctx.put(proof)
-        finals = jnp.asarray(proof.final_evals)
-    else:
-        s = ctx.get_value()
-        proof = ctx.get()
-        ok, rho, finals = SC.verify(s, proof, 1, ctx.tr)
-        if not ok:
-            raise ProofError("g_sum sumcheck failed")
-    ctx.check_eq(ctx.claim(v, rho), finals[0], "g_sum final eval")
-    return s
+    """Returns S = sum_z v(z) via the half-point identity — no sum-check.
+
+    For multilinear f~, eq(z, (1/2,...,1/2)) = 2^-m for EVERY z, so
+    sum_z f(z) = 2^m * f~(1/2,...,1/2): a single evaluation claim replaces
+    the whole single-factor sum-check (exact, not probabilistic).
+    """
+    m = view_log_n(v)
+    return F.f4mul(_fc((1 << m) % F.P), ctx.claim(v, _half_point(m)))
 
 
 def g_dot_eq(ctx: Ctx, views: Sequence[View], r: jnp.ndarray,
@@ -460,45 +484,20 @@ def g_matmul_term(ctx: Ctx, A: View, B: View, shape: Tuple[int, int, int],
 
 def g_rowsum(ctx: Ctx, X: View, shape: Tuple[int, int],
              r_i: jnp.ndarray) -> jnp.ndarray:
-    """Returns sum_k X~(r_i, k) (row-sum vector's MLE at r_i)."""
+    """Returns sum_k X~(r_i, k) — half-point identity over the column vars."""
     n, k = shape
-    if ctx.is_prover:
-        Xm = ctx.materialize(X).reshape(n, k)
-        X_r = partial_eval_rows(Xm, r_i)
-        t = ctx.put_value(fsum(X_r, axis=0))
-        proof, rho = SC.prove([X_r], ctx.tr)
-        ctx.put(proof)
-        finals = jnp.asarray(proof.final_evals)
-    else:
-        t = ctx.get_value()
-        proof = ctx.get()
-        ok, rho, finals = SC.verify(t, proof, 1, ctx.tr)
-        if not ok:
-            raise ProofError("g_rowsum sumcheck failed")
-    ctx.check_eq(ctx.claim(X, jnp.concatenate([r_i, rho])), finals[0],
-                 "rowsum eval")
-    return t
+    lk = k.bit_length() - 1
+    pt = jnp.concatenate([jnp.asarray(r_i), _half_point(lk)])
+    return F.f4mul(_fc(k % F.P), ctx.claim(X, pt))
 
 
 def g_colsum(ctx: Ctx, X: View, shape: Tuple[int, int],
              r_j: jnp.ndarray) -> jnp.ndarray:
+    """Returns sum_i X~(i, r_j) — half-point identity over the row vars."""
     n, k = shape
-    if ctx.is_prover:
-        Xm = ctx.materialize(X).reshape(n, k)
-        X_c = partial_eval_cols(Xm, r_j)
-        t = ctx.put_value(fsum(X_c, axis=0))
-        proof, rho = SC.prove([X_c], ctx.tr)
-        ctx.put(proof)
-        finals = jnp.asarray(proof.final_evals)
-    else:
-        t = ctx.get_value()
-        proof = ctx.get()
-        ok, rho, finals = SC.verify(t, proof, 1, ctx.tr)
-        if not ok:
-            raise ProofError("g_colsum sumcheck failed")
-    ctx.check_eq(ctx.claim(X, jnp.concatenate([rho, r_j])), finals[0],
-                 "colsum eval")
-    return t
+    ln = n.bit_length() - 1
+    pt = jnp.concatenate([_half_point(ln), jnp.asarray(r_j)])
+    return F.f4mul(_fc(n % F.P), ctx.claim(X, pt))
 
 
 def _fc(c: int) -> jnp.ndarray:
@@ -560,34 +559,27 @@ def g_int_matmul(ctx: Ctx, A_hi: View, A_lo: View, B_hi: View, B_lo: View,
     ln, lm = n.bit_length() - 1, m.bit_length() - 1
     r_i = ctx.challenge_point(ln)
     r_j = ctx.challenge_point(lm)
-    Ah = vaff([(1, A_hi)], const=-128)   # centered limbs in [-128, 128)
-    Al = vaff([(1, A_lo)], const=-128)
-    Bh = vaff([(1, B_hi)], const=-128)
-    Bl = vaff([(1, B_lo)], const=-128)
-    t_hh = g_matmul_term(ctx, Ah, Bh, shape, r_i, r_j, a_t, b_t)
-    t_hl = g_matmul_term(ctx, Ah, Bl, shape, r_i, r_j, a_t, b_t)
-    t_lh = g_matmul_term(ctx, Al, Bh, shape, r_i, r_j, a_t, b_t)
-    t_ll = g_matmul_term(ctx, Al, Bl, shape, r_i, r_j, a_t, b_t)
+    # Centered operands as single affine views: A - 128 = 256 Ah' + Al'
+    # with Ah' = A_hi - 128, Al' = A_lo - 128 (same for B). The limb
+    # decomposition 256^2 HH + 256 HL + 256 LH + LL factors exactly as
+    # (256 Ah' + Al') @ (256 Bh' + Bl'), so ONE two-factor sum-check at a
+    # single rho replaces four — same mod-p statement, and the shared rho
+    # collapses the operand evaluation claims from 16 to 4 per matmul.
+    Ac = vaff([(256, A_hi), (1, A_lo)], const=-(128 * 256 + 128))
+    Bc = vaff([(256, B_hi), (1, B_lo)], const=-(128 * 256 + 128))
+    t_cc = g_matmul_term(ctx, Ac, Bc, shape, r_i, r_j, a_t, b_t)
     if a_t:   # row sums of A = column sums of the stored A^T
-        rs_h = g_colsum(ctx, Ah, (k, n), r_i)
-        rs_l = g_colsum(ctx, Al, (k, n), r_i)
+        rs = g_colsum(ctx, Ac, (k, n), r_i)
     else:
-        rs_h = g_rowsum(ctx, Ah, (n, k), r_i)
-        rs_l = g_rowsum(ctx, Al, (n, k), r_i)
+        rs = g_rowsum(ctx, Ac, (n, k), r_i)
     if b_t:   # column sums of B = row sums of the stored B^T
-        cs_h = g_rowsum(ctx, Bh, (m, k), r_j)
-        cs_l = g_rowsum(ctx, Bl, (m, k), r_j)
+        cs = g_rowsum(ctx, Bc, (m, k), r_j)
     else:
-        cs_h = g_colsum(ctx, Bh, (k, m), r_j)
-        cs_l = g_colsum(ctx, Bl, (k, m), r_j)
-    # A = 256 Ah' + Al' + 128 (Ah' = A_hi-128, Al' = A_lo-128), same for B:
-    # C = 256^2 HH + 256 HL + 256 LH + LL
-    #     + 128*256 rowsum(Ah') + 128 rowsum(Al')
-    #     + 128*256 colsum(Bh') + 128 colsum(Bl') + 128^2 k.
+        cs = g_colsum(ctx, Bc, (k, m), r_j)
+    # C = (A' + 128)(B' + 128) with A' = A - 128:
+    # C = A'B' + 128 rowsum(A') + 128 colsum(B') + 128^2 k.
     acc = f4_lincomb([
-        (256 * 256, t_hh), (256, t_hl), (256, t_lh), (1, t_ll),
-        (128 * 256, rs_h), (128, rs_l),
-        (128 * 256, cs_h), (128, cs_l),
+        (1, t_cc), (128, rs), (128, cs),
     ], const=(128 * 128 * k) % F.P)
     return acc, r_i, r_j
 
@@ -610,27 +602,34 @@ def g_rescale(ctx: Ctx, acc_val: jnp.ndarray, r: jnp.ndarray,
     ctx.check_eq(lhs, rhs, what)
 
 
+@dataclasses.dataclass(frozen=True)
+class LookupReq:
+    """A deferred LogUp instance, registered by g_range8/g_lut and proved
+    jointly for the whole layer by flush_lookups."""
+    kind: str                           # "range8" | "lut"
+    table: Optional[str]                # LUT name (pair mode)
+    idx: View
+    out: Optional[View]
+    log_n: int
+    what: str
+    idx_ints: Optional[np.ndarray] = None    # prover only
+    out_ints: Optional[np.ndarray] = None
+
+
 def g_range8(ctx: Ctx, com_name: str, n_elems: int):
-    """Value-mode LogUp: every entry of commitment `com_name` in [0,256)."""
-    total = 1 << max((n_elems - 1).bit_length(), 0) if n_elems > 1 else 1
+    """Value-mode LogUp: every entry of commitment `com_name` in [0,256).
+
+    Registers the instance; the proof happens in flush_lookups."""
+    log_total = sum(ctx.shapes[com_name])
+    full = Slice(com_name, 0, log_total)
+    ints = None
     if ctx.is_prover:
         ints = ctx.ints[com_name]
         assert ints.min() >= 0 and ints.max() < 256, \
             f"{com_name} has out-of-range entries"
-        pf = LK.prove(ints, None, None, 8, ctx.tr, ctx.params)
-        ctx.put(pf)
-        w_point, idx_claim = jnp.asarray(pf.w_point), jnp.asarray(pf.idx_claim)
-    else:
-        pf = ctx.get()
-        ok, w_point, idx_claim, _ = LK.verify(pf, total, None, 8, ctx.tr,
-                                              ctx.params)
-        if not ok:
-            raise ProofError(f"range8 lookup failed for {com_name}")
-        w_point, idx_claim = jnp.asarray(w_point), jnp.asarray(idx_claim)
-    log_total = sum(ctx.shapes[com_name])
-    full = Slice(com_name, 0, log_total)
-    ctx.check_eq(ctx.claim(full, w_point), idx_claim,
-                 f"range8 claim for {com_name}")
+    ctx.lookups.append(LookupReq(
+        kind="range8", table=None, idx=full, out=None, log_n=log_total,
+        what=f"range8 {com_name}", idx_ints=ints))
 
 
 # ---------------------------------------------------------------------------
@@ -783,25 +782,158 @@ def g_lut(ctx: Ctx, table_name: str, idx: View, out: View,
     """Pair-mode LogUp: (idx_i, out_i) in {(j, T[j])} for a standard LUT.
 
     idx/out views must cover n_elems padded to 2^m with valid pairs —
-    callers pad idx with 0 and out with T[0].
+    callers pad idx with 0 and out with T[0].  Registers the instance; the
+    proof happens in flush_lookups.
     """
-    table = LUTS.table_q(table_name).astype(np.int64)
-    total = 1 << max((n_elems - 1).bit_length(), 0) if n_elems > 1 else 1
+    log_n = view_log_n(idx)
+    assert view_log_n(out) == log_n, "lut idx/out view size mismatch"
     if ctx.is_prover:
-        pf = LK.prove(idx_ints, out_ints, table, LUTS.LUT_BITS, ctx.tr,
-                      ctx.params)
-        ctx.put(pf)
-        w_point = jnp.asarray(pf.w_point)
-        idx_claim = jnp.asarray(pf.idx_claim)
-        out_claim = jnp.asarray(pf.out_claim)
+        idx_ints = np.asarray(idx_ints, dtype=np.int64).reshape(-1)
+        out_ints = np.asarray(out_ints, dtype=np.int64).reshape(-1)
+        assert len(idx_ints) == (1 << log_n) == len(out_ints), \
+            f"lut {what}: ints not padded to view size"
+    ctx.lookups.append(LookupReq(
+        kind="lut", table=table_name, idx=idx, out=out, log_n=log_n,
+        what=what, idx_ints=idx_ints, out_ints=out_ints))
+
+
+def _lookup_w_f4(ctx: "ProverCtx", req: LookupReq,
+                 beta: Optional[jnp.ndarray]) -> jnp.ndarray:
+    """Prover-side witness fingerprint vector w for one instance."""
+    if req.kind == "range8":
+        return F.f4_from_base(F.f_from_int(req.idx_ints))
+    return LK.combine_pair(F.f_from_int(req.idx_ints),
+                           F.f_from_int(req.out_ints), beta)
+
+
+def _lookup_table_sum(req: LookupReq, counts_info, beta, alpha
+                      ) -> jnp.ndarray:
+    """Verifier-computable S_b = sum_j m_j/(alpha - t_j)."""
+    if req.kind == "range8":
+        counts = counts_info
+        support = np.arange(256, dtype=np.int64)
+        t_vals = F.f4_from_base(F.f_from_int(support))
+        return LK.table_inverse_sum(t_vals, counts, alpha)
+    support, counts = counts_info
+    table = LUTS.table_q(req.table).astype(np.int64)
+    t_vals = LK.combine_pair(F.f_from_int(support),
+                             F.f_from_int(table[support]), beta)
+    return LK.table_inverse_sum(t_vals, counts, alpha)
+
+
+def flush_lookups(ctx: Ctx, helper_name: str = "lkh", aspect: int = 0):
+    """Prove/verify every registered LogUp instance for this context.
+
+    One shared base-field helper commitment holds the inverse columns
+    a = 1/(alpha - w) of ALL instances (4 Fp4 coefficient planes each) as
+    aligned slices; multiplicities travel in the clear (see lookup.py).
+    Per instance: a half-point sum claim ties S_a to the verifier-computed
+    table sum, and one degree-3 zerocheck ties a to the witness views.
+    All evaluation claims join the layer's batched PCS openings.
+    """
+    reqs, ctx.lookups = ctx.lookups, []
+    if not reqs:
+        return
+    # 1. per-instance beta + multiplicities (absorbed before alpha)
+    betas: List[Optional[jnp.ndarray]] = []
+    infos: List = []
+    for req in reqs:
+        beta = ctx.tr.challenge_f4() if req.kind == "lut" else None
+        betas.append(beta)
+        n_i = 1 << req.log_n
+        if req.kind == "range8":
+            if ctx.is_prover:
+                counts = LK.dense_counts(req.idx_ints, 256)
+                # counts < 2^31, so ship uint32: the codec 31-bit packs it
+                ctx.put(("m", counts.astype(np.uint32)))
+            else:
+                obj = ctx.get()
+                if not (isinstance(obj, tuple) and len(obj) == 2
+                        and obj[0] == "m"):
+                    raise ProofError(f"{req.what}: bad multiplicity object")
+                try:
+                    counts = LK.check_dense_counts(obj[1], 256, n_i)
+                except LK.BadMultiplicities as e:
+                    raise ProofError(f"{req.what}: {e}")
+            ctx.tr.absorb(F.f_from_int(counts))
+            infos.append(counts)
+        else:
+            if ctx.is_prover:
+                support, counts = LK.sparse_counts(req.idx_ints,
+                                                   LUTS.LUT_SIZE)
+                ctx.put(("msp", support.astype(np.uint32),
+                         counts.astype(np.uint32)))
+            else:
+                obj = ctx.get()
+                if not (isinstance(obj, tuple) and len(obj) == 3
+                        and obj[0] == "msp"):
+                    raise ProofError(f"{req.what}: bad multiplicity object")
+                try:
+                    support, counts = LK.check_sparse_counts(
+                        obj[1], obj[2], LUTS.LUT_SIZE, n_i)
+                except LK.BadMultiplicities as e:
+                    raise ProofError(f"{req.what}: {e}")
+            ctx.tr.absorb(F.f_from_int(support))
+            ctx.tr.absorb(F.f_from_int(counts))
+            infos.append((support, counts))
+    # 2. shared alpha, drawn after every witness root and multiplicity
+    alpha = ctx.tr.challenge_f4()
+    # 3. helper commitment layout: 4 coefficient planes per instance,
+    #    packed descending by size (public function of the layer config)
+    items = [(i, k, 1 << reqs[i].log_n)
+             for i in range(len(reqs)) for k in range(4)]
+    order = sorted(range(len(items)), key=lambda t: -items[t][2])
+    offsets: Dict[Tuple[int, int], int] = {}
+    off = 0
+    for t in order:
+        i, k, sz = items[t]
+        offsets[(i, k)] = off
+        off += sz
+    total = 1 << max((off - 1).bit_length(), 0) if off > 1 else 1
+    a_vecs: List[Optional[jnp.ndarray]] = [None] * len(reqs)
+    if ctx.is_prover:
+        helper = np.zeros(total, dtype=np.uint32)
+        for i, req in enumerate(reqs):
+            w = _lookup_w_f4(ctx, req, betas[i])
+            ab = jnp.broadcast_to(alpha, w.shape)
+            a = F.f4inv(F.f4sub(ab, w))                  # (n_i, 4)
+            a_vecs[i] = a
+            a_np = np.asarray(a)
+            n_i = 1 << req.log_n
+            for k in range(4):
+                helper[offsets[(i, k)]:offsets[(i, k)] + n_i] = a_np[:, k]
+        ctx.commit_field(helper_name, jnp.asarray(helper), aspect)
     else:
-        pf = ctx.get()
-        ok, w_point, idx_claim, out_claim = LK.verify(
-            pf, total, table, LUTS.LUT_BITS, ctx.tr, ctx.params)
-        if not ok:
-            raise ProofError(f"lut lookup failed: {what}")
-        w_point = jnp.asarray(w_point)
-        idx_claim = jnp.asarray(idx_claim)
-        out_claim = jnp.asarray(out_claim)
-    ctx.check_eq(ctx.claim(idx, w_point), idx_claim, f"{what} idx claim")
-    ctx.check_eq(ctx.claim(out, w_point), out_claim, f"{what} out claim")
+        ctx.commit_field(helper_name, total, aspect)
+    # 4. per-instance sum tie + zerocheck
+    for i, req in enumerate(reqs):
+        coeffs = [Slice(helper_name, offsets[(i, k)], req.log_n)
+                  for k in range(4)]
+        hp = _half_point(req.log_n)
+        a_half = PCS.combine_f4_values([ctx.claim(s, hp) for s in coeffs])
+        s_a = F.f4mul(_fc((1 << req.log_n) % F.P), a_half)
+        s_b = _lookup_table_sum(req, infos[i], betas[i], alpha)
+        ctx.check_eq(s_a, s_b, f"{req.what} logup sum")
+        r = ctx.challenge_point(req.log_n)
+        if ctx.is_prover:
+            eq_r = eq_points(r)
+            w = _lookup_w_f4(ctx, req, betas[i])
+            ab = jnp.broadcast_to(alpha, w.shape)
+            proof, rho = SC.prove([eq_r, a_vecs[i], F.f4sub(ab, w)], ctx.tr)
+            ctx.put(proof)
+            finals = jnp.asarray(proof.final_evals)
+        else:
+            proof = ctx.get()
+            ok, rho, finals = SC.verify(_fc(1), proof, 3, ctx.tr)
+            if not ok:
+                raise ProofError(f"{req.what} zerocheck failed")
+            if rho.shape[0] != req.log_n:
+                raise ProofError(f"{req.what} zerocheck wrong arity")
+        ctx.check_eq(eq_eval(r, rho), finals[0], f"{req.what} eq factor")
+        a_rho = PCS.combine_f4_values([ctx.claim(s, rho) for s in coeffs])
+        ctx.check_eq(a_rho, finals[1], f"{req.what} inverse column")
+        w_rho = ctx.claim(req.idx, rho)
+        if req.kind == "lut":
+            w_rho = F.f4add(w_rho, F.f4mul(betas[i], ctx.claim(req.out, rho)))
+        ctx.check_eq(F.f4sub(alpha, w_rho), finals[2],
+                     f"{req.what} witness tie")

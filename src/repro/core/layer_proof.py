@@ -133,6 +133,7 @@ def weight_range_proof(wt: WeightCommit, params: PCS.PCSParams,
     ctx = C.ProverCtx(tr, params)
     ctx.attach(name, wt.com, wt.ints)
     C.g_range8(ctx, name, wt.n)
+    C.flush_lookups(ctx)
     ctx.finalize()
     return ctx.tape
 
@@ -156,6 +157,7 @@ def verify_weight_setup(cfg: B.BlockCfg, root: np.ndarray, range_tape: List,
     ctx.attach(name, root, total)
     try:
         C.g_range8(ctx, name, total)
+        C.flush_lookups(ctx)
         ctx.finalize()
     except C.ProofError:
         return False
@@ -196,6 +198,7 @@ def prove_layer(cfg: B.BlockCfg, layer_index: int, wt: WeightCommit,
     C.g_range8(ctx, "b_out", b_out.n)
     if check_input_range:
         C.g_range8(ctx, "b_in", b_in.n)
+    C.flush_lookups(ctx)
     ctx.finalize()
     return LayerProof(layer_index=layer_index, in_root=b_in.root,
                       out_root=b_out.root, wt_root=wt.root, tape=ctx.tape)
@@ -203,12 +206,13 @@ def prove_layer(cfg: B.BlockCfg, layer_index: int, wt: WeightCommit,
 
 def verify_layer(cfg: B.BlockCfg, proof: LayerProof, wt_root: np.ndarray,
                  params: PCS.PCSParams,
-                 check_input_range: bool = False) -> bool:
+                 check_input_range: bool = False,
+                 store: Optional[PCS.ColumnStore] = None) -> bool:
     if not np.array_equal(proof.wt_root, wt_root):
         return False
     tr = Transcript("nanozk.layer")
     tr.absorb_int(proof.layer_index)
-    ctx = C.VerifierCtx(tr, params, proof.tape)
+    ctx = C.VerifierCtx(tr, params, proof.tape, store=store)
     # reconstruct public layouts
     wb_wt = C.WitnessBuilder("wt")
     wt_layout = B.declare_weights(cfg, wb_wt, None)
@@ -237,6 +241,7 @@ def verify_layer(cfg: B.BlockCfg, proof: LayerProof, wt_root: np.ndarray,
         C.g_range8(ctx, "b_out", b_total)
         if check_input_range:
             C.g_range8(ctx, "b_in", b_total)
+        C.flush_lookups(ctx)
         ctx.finalize()
     except C.ProofError:
         return False

@@ -2,80 +2,54 @@
 
 Statement: every entry of a committed witness vector lies in a public table.
 Two modes:
-* value mode  — w_i in T, T = [0, 2^bits) (range checks). The table's MLE has
-  the closed form sum_b 2^b r_b, so the verifier never materializes it.
+* value mode  — w_i in T, T = [0, 2^bits) (range checks).
 * pair mode   — (idx_i, out_i) in {(j, T[j])}: function LUTs (exp/GELU/...).
-  Pairs are combined as w = idx + beta * out for a transcript challenge beta;
-  the table MLE is id_mle(r) + beta * T~(r) with T~ evaluated directly from
-  the public table (O(2^16) field ops — the transparent choice; production
-  would ship precomputed table commitments).
+  Pairs are combined as w = idx + beta * out for a transcript challenge beta.
 
-LogUp identity, for a challenge alpha in Fp4 drawn after all commitments:
+LogUp identity, for a challenge alpha in Fp4 drawn after the multiplicities
+are fixed in the transcript:
 
     sum_i 1/(alpha - w_i)  =  sum_j m_j/(alpha - t_j)
 
-with m_j the multiplicity of t_j among the w_i. The prover commits the
-inverse columns a_i = 1/(alpha - w_i), b_j = m_j/(alpha - t_j) and m, then
-proves with four sum-checks:
-    S_a = sum a (reduces to an opening of a)
-    S_b = sum b (must equal S_a)
-    zerocheck  sum_z eq(r,z) a(z) (alpha - w(z)) = 1
-    zerocheck  sum_z eq(r',z) b(z) (alpha - t(z)) = m~(r')
+with m_j the multiplicity of t_j among the w_i.
 
-Soundness: collision of alpha with any (w_i, t_j) pole <= (n + |T|)/p^4;
-sum-check errors deg/p^4 per round. Accounted in chain.py.
+Wire-lean realization (circuit.flush_lookups drives it): the prover ships
+the multiplicities m IN THE CLEAR (dense for 256-entry range tables, sparse
+(index, count) pairs for 2^16 LUTs — the support is at most n entries), so
+the table side needs NO commitment, NO sum-check and NO openings; the
+verifier just evaluates sum_j m_j/(alpha - t_j) itself with one batched
+inversion over the support. Soundness is unchanged: the identity is an
+equality of rational functions in alpha; with all counts < p the partial
+fraction decomposition is unique, so matching sums at a random alpha drawn
+AFTER m (collision prob <= (n + |T|)/p^4) forces the witness multiset to
+equal the declared one, and any witness element outside the table support
+would contribute a pole the right-hand side cannot match.
+
+The witness side stays committed: the inverse column a_i = 1/(alpha - w_i)
+for EVERY registered instance of a layer is packed into one shared
+base-field helper commitment (4 Fp4 coefficient planes per instance, laid
+out as aligned slices), and each instance is pinned by
+    S_a = sum_z a(z)             — a half-point evaluation claim, no sum-check
+    sum_z eq(r,z) a(z) (alpha - w(z)) = 1   — one degree-3 zerocheck
+with all claims discharged in the standard batched PCS opening.
 """
 from __future__ import annotations
 
-import dataclasses
-from typing import List, Optional, Tuple
+from typing import Optional, Tuple
 
 import numpy as np
 import jax.numpy as jnp
 
 from . import field as F
-from . import pcs as PCS
-from . import sumcheck as SC
-from .mle import eq_eval, eq_points, fsum, mle_eval_base, pad_pow2
-from .transcript import Transcript
+from .mle import fsum
 
 
-@dataclasses.dataclass
-class LookupProof:
-    m_roots: np.ndarray            # (4-or-1, digest) roots: m is base -> (1, .)
-    a_roots: np.ndarray            # (4, digest) Fp4 inverse column (witness side)
-    b_roots: np.ndarray            # (4, digest) Fp4 inverse column (table side)
-    s_claim: np.ndarray            # (4,) common sum S
-    sc_sum_a: SC.SumcheckProof
-    sc_sum_b: SC.SumcheckProof
-    sc_zero_a: SC.SumcheckProof
-    sc_zero_b: SC.SumcheckProof
-    m_tilde: np.ndarray            # (4,) claimed m~(r')
-    m_open: PCS.OpeningBundle
-    a_opens: List[PCS.OpeningBundle]   # per-coefficient bundles
-    b_opens: List[PCS.OpeningBundle]
-    # Eval points the CALLER must discharge against the external idx/out
-    # commitments: (point, claimed idx value, claimed out value or None).
-    w_point: np.ndarray            # (m, 4)
-    idx_claim: np.ndarray          # (4,)
-    out_claim: Optional[np.ndarray]
+class BadMultiplicities(Exception):
+    """Raised when a shipped multiplicity table is malformed."""
 
 
-def id_mle(point: jnp.ndarray) -> jnp.ndarray:
-    """MLE of the identity table T[j] = j at an Fp4 point.
-
-    j = sum_k bit_k 2^k with bit k bound to point[m-1-k] (MSB-first global
-    convention), so id~(r) = sum_j 2^(m-1-j) r_j.
-    """
-    m = point.shape[0]
-    acc = F.f4zero(())
-    for j in range(m):
-        term = F.fmul(point[j], F.fconst(1 << (m - 1 - j)))
-        acc = F.f4add(acc, term)
-    return acc
-
-
-def _combine(idx_f: jnp.ndarray, out_f, beta: jnp.ndarray) -> jnp.ndarray:
+def combine_pair(idx_f: jnp.ndarray, out_f: Optional[jnp.ndarray],
+                 beta: Optional[jnp.ndarray]) -> jnp.ndarray:
     """w = idx + beta*out as Fp4 vectors (idx/out are base-field)."""
     w = F.f4_from_base(idx_f)
     if out_f is not None:
@@ -84,184 +58,64 @@ def _combine(idx_f: jnp.ndarray, out_f, beta: jnp.ndarray) -> jnp.ndarray:
     return w
 
 
-def prove(idx: np.ndarray, out: Optional[np.ndarray], table: Optional[np.ndarray],
-          table_bits: int, transcript: Transcript, params: PCS.PCSParams
-          ) -> LookupProof:
-    """idx/out: int arrays (callers pre-pad to 2^m with valid table entries).
-    table: int array of size 2^table_bits for pair mode, None for value mode.
-    The EXTERNAL commitments of idx/out must already be absorbed by the caller.
+def dense_counts(idx: np.ndarray, table_size: int) -> np.ndarray:
+    """Multiplicity vector over a small dense table domain."""
+    m = np.bincount(np.asarray(idx, dtype=np.int64), minlength=table_size)
+    assert m.shape[0] == table_size, "witness index out of table range"
+    return m.astype(np.int64)
+
+
+def sparse_counts(idx: np.ndarray, table_size: int
+                  ) -> Tuple[np.ndarray, np.ndarray]:
+    """(support indices, counts) — at most n entries for any table size."""
+    m = dense_counts(idx, table_size)
+    nz = np.nonzero(m)[0]
+    return nz.astype(np.int64), m[nz]
+
+
+def check_dense_counts(obj, table_size: int, n_max: int) -> np.ndarray:
+    """Validate an untrusted dense multiplicity vector."""
+    m = np.asarray(obj)
+    if (m.ndim != 1 or m.shape[0] != table_size
+            or not np.issubdtype(m.dtype, np.integer)):
+        raise BadMultiplicities("dense multiplicities: bad shape/dtype")
+    m = m.astype(np.int64)
+    if m.size and (m.min() < 0 or m.max() > n_max):
+        raise BadMultiplicities("dense multiplicities: count out of range")
+    return m
+
+
+def check_sparse_counts(support, counts, table_size: int, n_max: int
+                        ) -> Tuple[np.ndarray, np.ndarray]:
+    """Validate untrusted sparse multiplicities (sorted, unique, bounded)."""
+    s = np.asarray(support)
+    c = np.asarray(counts)
+    if (s.ndim != 1 or c.ndim != 1 or s.shape != c.shape
+            or not np.issubdtype(s.dtype, np.integer)
+            or not np.issubdtype(c.dtype, np.integer)):
+        raise BadMultiplicities("sparse multiplicities: bad shape/dtype")
+    s, c = s.astype(np.int64), c.astype(np.int64)
+    if s.shape[0] > n_max:
+        raise BadMultiplicities("sparse multiplicities: support too large")
+    if s.shape[0]:
+        if s.min() < 0 or s.max() >= table_size:
+            raise BadMultiplicities("sparse multiplicities: index range")
+        if np.any(np.diff(s) <= 0):
+            raise BadMultiplicities("sparse multiplicities: not sorted-unique")
+        if c.min() < 1 or c.max() > n_max:
+            raise BadMultiplicities("sparse multiplicities: count range")
+    return s, c
+
+
+def table_inverse_sum(t_vals: jnp.ndarray, counts: np.ndarray,
+                      alpha: jnp.ndarray) -> jnp.ndarray:
+    """sum_j m_j / (alpha - t_j) over the support, one batched inversion.
+
+    t_vals: (k, 4) Fp4 table fingerprints at the support; counts: (k,) ints.
     """
-    n = len(idx)
-    assert n & (n - 1) == 0
-    t_size = 1 << table_bits
-    pair = table is not None
-
-    beta = transcript.challenge_f4() if pair else None
-    # multiplicities over the table domain
-    m_np = np.bincount(np.asarray(idx, dtype=np.int64), minlength=t_size)
-    assert m_np.shape[0] == t_size, "witness index out of table range"
-    m_f = F.f_from_int(m_np)
-    m_com = PCS.commit(m_f, params)
-    transcript.absorb(jnp.asarray(m_com.root))
-
-    alpha = transcript.challenge_f4()
-
-    idx_f = F.f_from_int(idx)
-    out_f = F.f_from_int(out) if pair else None
-    w = _combine(idx_f, out_f, beta)                              # (n, 4)
-    t_ids = F.f_from_int(np.arange(t_size, dtype=np.int64))
-    t_vals = _combine(t_ids, F.f_from_int(table) if pair else None, beta)
-
-    ab = jnp.broadcast_to(alpha, w.shape)
-    a = F.f4inv(F.f4sub(ab, w))                                   # (n, 4)
-    at = jnp.broadcast_to(alpha, t_vals.shape)
-    b = F.f4mul(F.f4inv(F.f4sub(at, t_vals)), F.f4_from_base(m_f))
-
-    a_com = PCS.commit_f4(a, params)
-    b_com = PCS.commit_f4(b, params)
-    transcript.absorb(jnp.asarray(a_com.roots))
-    transcript.absorb(jnp.asarray(b_com.roots))
-
-    s = fsum(a, axis=0)
-    transcript.absorb(s)
-    sc_sum_a, rho_a = SC.prove([a], transcript)
-    sc_sum_b, rho_b = SC.prove([b], transcript)
-
-    # zerocheck (witness side): sum eq(r,.) a (alpha - w) = 1
-    mw = n.bit_length() - 1
-    r = transcript.challenge_f4_vec(mw)
-    eq_r = eq_points(r)
-    sc_zero_a, rho_za = SC.prove([eq_r, a, F.f4sub(ab, w)], transcript)
-
-    # zerocheck (table side): sum eq(r',.) b (alpha - t) = m~(r')
-    rp = transcript.challenge_f4_vec(table_bits)
-    m_tilde = mle_eval_base(m_f, rp)
-    transcript.absorb(m_tilde)
-    eq_rp = eq_points(rp)
-    sc_zero_b, rho_zb = SC.prove([eq_rp, b, F.f4sub(at, t_vals)], transcript)
-
-    # openings: m at r'; a at {rho_a, rho_za}; b at {rho_b, rho_zb}
-    m_open = PCS.prove_openings(m_com, [rp], transcript, params)
-    a_opens = [PCS.prove_openings(c, [rho_a, rho_za], transcript, params)
-               for c in a_com.coeffs]
-    b_opens = [PCS.prove_openings(c, [rho_b, rho_zb], transcript, params)
-               for c in b_com.coeffs]
-
-    idx_claim = mle_eval_base(idx_f, rho_za)
-    out_claim = mle_eval_base(out_f, rho_za) if pair else None
-    return LookupProof(
-        m_roots=m_com.root[None], a_roots=a_com.roots, b_roots=b_com.roots,
-        s_claim=np.asarray(s), sc_sum_a=sc_sum_a, sc_sum_b=sc_sum_b,
-        sc_zero_a=sc_zero_a, sc_zero_b=sc_zero_b,
-        m_tilde=np.asarray(m_tilde), m_open=m_open,
-        a_opens=a_opens, b_opens=b_opens,
-        w_point=np.asarray(rho_za), idx_claim=np.asarray(idx_claim),
-        out_claim=np.asarray(out_claim) if pair else None)
-
-
-def _verify_f4_openings(roots: np.ndarray, n: int, points, values,
-                        bundles, transcript: Transcript,
-                        params: PCS.PCSParams) -> bool:
-    """Check 4 per-coefficient openings and combine to the Fp4 claims."""
-    log_r, log_c = PCS.shape_for(n)
-    # Derive each coefficient's value from the bundle's u row (the binding to
-    # the Merkle root happens inside verify_openings via column queries), then
-    # check that the Fp4 recombination of the four coefficient values equals
-    # the sum-check's claimed Fp4 evaluation.
-    derived = []
-    for k in range(4):
-        bundle = bundles[k]
-        vk = []
-        for u_np, point in zip(bundle.us, points):
-            u = jnp.asarray(u_np)
-            a_eq = eq_points(jnp.asarray(point)[log_r:])
-            vk.append(fsum(F.f4mul(u, a_eq), axis=0))
-        derived.append(vk)
-        if not PCS.verify_openings(roots[k], log_r, log_c, points, vk,
-                                   bundle, transcript, params):
-            return False
-    for p_i, target in enumerate(values):
-        got = PCS.combine_f4_values([derived[k][p_i] for k in range(4)])
-        if not np.array_equal(np.asarray(got), np.asarray(target)):
-            return False
-    return True
-
-
-def verify(proof: LookupProof, n: int, table: Optional[np.ndarray],
-           table_bits: int, transcript: Transcript, params: PCS.PCSParams
-           ) -> Tuple[bool, np.ndarray, np.ndarray, Optional[np.ndarray]]:
-    """Returns (ok, w_point, idx_claim, out_claim); the caller must discharge
-    idx/out claims against the external witness commitments."""
-    t_size = 1 << table_bits
-    pair = table is not None
-    beta = transcript.challenge_f4() if pair else None
-    transcript.absorb(jnp.asarray(proof.m_roots[0]))
-    alpha = transcript.challenge_f4()
-    transcript.absorb(jnp.asarray(proof.a_roots))
-    transcript.absorb(jnp.asarray(proof.b_roots))
-
-    s = jnp.asarray(proof.s_claim)
-    transcript.absorb(s)
-    ok_a, rho_a, fin_a = SC.verify(s, proof.sc_sum_a, 1, transcript)
-    if not ok_a:
-        return False, None, None, None
-    ok_b, rho_b, fin_b = SC.verify(s, proof.sc_sum_b, 1, transcript)
-    if not ok_b:
-        return False, None, None, None
-
-    mw = n.bit_length() - 1
-    r = transcript.challenge_f4_vec(mw)
-    one = F.f4one(())
-    ok_za, rho_za, fin_za = SC.verify(one, proof.sc_zero_a, 3, transcript)
-    if not ok_za:
-        return False, None, None, None
-    # factor 0 must equal eq(r, rho_za), computed directly
-    eq_val = mle_eval_f4_of_eq(r, rho_za)
-    if not np.array_equal(np.asarray(fin_za[0]), np.asarray(eq_val)):
-        return False, None, None, None
-
-    rp = transcript.challenge_f4_vec(table_bits)
-    m_tilde = jnp.asarray(proof.m_tilde)
-    transcript.absorb(m_tilde)
-    ok_zb, rho_zb, fin_zb = SC.verify(m_tilde, proof.sc_zero_b, 3, transcript)
-    if not ok_zb:
-        return False, None, None, None
-    eq_val_b = mle_eval_f4_of_eq(rp, rho_zb)
-    if not np.array_equal(np.asarray(fin_zb[0]), np.asarray(eq_val_b)):
-        return False, None, None, None
-    # factor 2 on the table side: alpha - t~(rho_zb), fully public
-    t_mle = id_mle(rho_zb)
-    if pair:
-        t_tab = mle_eval_base(F.f_from_int(table), rho_zb)
-        t_mle = F.f4add(t_mle, F.f4mul(beta, t_tab))
-    want = F.f4sub(alpha, t_mle)
-    if not np.array_equal(np.asarray(fin_zb[2]), np.asarray(want)):
-        return False, None, None, None
-
-    # witness-side factor 2: alpha - w~(rho_za) with w = idx + beta*out.
-    w_eval = jnp.asarray(proof.idx_claim)
-    if pair:
-        w_eval = F.f4add(w_eval, F.f4mul(beta, jnp.asarray(proof.out_claim)))
-    want_a = F.f4sub(alpha, w_eval)
-    if not np.array_equal(np.asarray(fin_za[2]), np.asarray(want_a)):
-        return False, None, None, None
-    if not np.array_equal(proof.w_point, np.asarray(rho_za)):
-        return False, None, None, None
-
-    # PCS openings: m at r'; a at {rho_a, rho_za}; b at {rho_b, rho_zb}
-    if not PCS.verify_openings(proof.m_roots[0], *PCS.shape_for(t_size),
-                               [rp], [m_tilde], proof.m_open, transcript,
-                               params):
-        return False, None, None, None
-    if not _verify_f4_openings(proof.a_roots, n, [rho_a, rho_za],
-                               [fin_a[0], fin_za[1]], proof.a_opens,
-                               transcript, params):
-        return False, None, None, None
-    if not _verify_f4_openings(proof.b_roots, t_size, [rho_b, rho_zb],
-                               [fin_b[0], fin_zb[1]], proof.b_opens,
-                               transcript, params):
-        return False, None, None, None
-    return True, proof.w_point, proof.idx_claim, proof.out_claim
-
-
-mle_eval_f4_of_eq = eq_eval  # retained alias
+    if t_vals.shape[0] == 0:
+        return jnp.zeros((4,), jnp.uint32)
+    ab = jnp.broadcast_to(alpha, t_vals.shape)
+    inv = F.f4inv(F.f4sub(ab, t_vals))                   # (k, 4)
+    m_f = F.f_from_int(np.asarray(counts, dtype=np.int64))
+    return fsum(F.fmul(inv, m_f[:, None]), axis=0)

@@ -101,6 +101,140 @@ def batch_open(tree: MerkleTree, indices) -> List[MerklePath]:
     return [open_path(tree, int(i)) for i in indices]
 
 
+def root_from_path(leaf: jnp.ndarray, path: MerklePath) -> np.ndarray:
+    """Recompute the root implied by a leaf + path (no comparison)."""
+    node = P2.hash_elems(jnp.asarray(leaf))
+    idx = path.index
+    for sib in path.siblings:
+        sib = jnp.asarray(sib)
+        node = P2.compress(sib, node) if idx & 1 else P2.compress(node, sib)
+        idx >>= 1
+    return np.asarray(node)
+
+
+# ---------------------------------------------------------------------------
+# Multiproofs: one deduplicated authentication structure for a set of
+# leaves of one tree.  Shared path prefixes between the leaves are shipped
+# exactly once — the node list contains, level by level (leaf level first)
+# and position-ascending within each level, precisely those sibling digests
+# that the verifier cannot derive from the leaves themselves.  This is the
+# wire form behind ColumnStore: per Merkle root, per attestation, each
+# internal node travels at most once.
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass
+class MerkleMultiProof:
+    indices: np.ndarray   # (k,) int64, sorted unique leaf positions
+    leaves: np.ndarray    # (k, leaf_len) uint32 leaf rows (the columns)
+    nodes: np.ndarray     # (n_nodes, DIGEST) uint32, canonical order
+    depth: int            # tree depth (2^depth leaves)
+
+
+def _multiproof_node_positions(indices: np.ndarray, depth: int):
+    """Canonical (level, position) list of non-derivable sibling nodes."""
+    known = sorted({int(i) for i in indices})
+    needed = []
+    for d in range(depth):
+        kset = set(known)
+        level_needed = sorted({p ^ 1 for p in kset} - kset)
+        needed.append(level_needed)
+        known = sorted({p >> 1 for p in kset})
+    return needed
+
+
+def build_multiproof(tree: MerkleTree, all_leaves: jnp.ndarray,
+                     indices) -> MerkleMultiProof:
+    """Open a set of leaf positions with shared prefixes deduplicated.
+
+    all_leaves: the full (n, leaf_len) leaf matrix the tree was built over.
+    """
+    idx = np.array(sorted({int(i) for i in indices}), dtype=np.int64)
+    depth = len(tree.levels) - 1
+    nodes = []
+    for d, level_needed in enumerate(_multiproof_node_positions(idx, depth)):
+        lvl = np.asarray(tree.levels[d])
+        for p in level_needed:
+            nodes.append(lvl[p])
+    leaves = np.asarray(all_leaves)[idx].astype(np.uint32)
+    return MerkleMultiProof(
+        indices=idx, leaves=leaves,
+        nodes=np.stack(nodes) if nodes else np.zeros((0, P2.DIGEST),
+                                                     np.uint32),
+        depth=depth)
+
+
+def multiproof_from_paths(indices, leaf_rows: np.ndarray,
+                          paths: List[MerklePath], depth: int
+                          ) -> MerkleMultiProof:
+    """Rebuild the deduplicated multiproof from per-leaf paths (used when
+    re-encoding a v1 attestation to v2 without access to the tree)."""
+    order = np.argsort(np.asarray(indices, dtype=np.int64), kind="stable")
+    seen = {}
+    for o in order:
+        i = int(indices[o])
+        if i not in seen:
+            seen[i] = (np.asarray(leaf_rows[o]), paths[o])
+    idx = np.array(sorted(seen), dtype=np.int64)
+    leaves = np.stack([seen[i][0] for i in idx]) if len(idx) else \
+        np.zeros((0, 0), np.uint32)
+    # sibling value at (level d, position s) comes from any path of a leaf
+    # j with (j >> d) == s ^ 1
+    by_level: List[dict] = [{} for _ in range(depth)]
+    for i in idx:
+        _, path = seen[int(i)]
+        assert path.siblings.shape[0] == depth, "path depth mismatch"
+        for d in range(depth):
+            by_level[d][(int(i) >> d) ^ 1] = path.siblings[d]
+    nodes = []
+    for d, level_needed in enumerate(
+            _multiproof_node_positions(idx, depth)):
+        for p in level_needed:
+            nodes.append(np.asarray(by_level[d][p]))
+    return MerkleMultiProof(
+        indices=idx, leaves=leaves.astype(np.uint32),
+        nodes=np.stack(nodes) if nodes else np.zeros((0, P2.DIGEST),
+                                                     np.uint32),
+        depth=depth)
+
+
+def verify_multiproof(root: np.ndarray, mp: MerkleMultiProof) -> bool:
+    """Recompute the root from a multiproof; every node must be consumed."""
+    if not isinstance(mp, MerkleMultiProof):
+        return False
+    idx = np.asarray(mp.indices)
+    nodes = np.asarray(mp.nodes)
+    leaves = np.asarray(mp.leaves)
+    if (idx.ndim != 1 or not np.issubdtype(idx.dtype, np.integer)
+            or leaves.ndim != 2 or leaves.shape[0] != idx.shape[0]
+            or nodes.ndim != 2 or nodes.shape[1:] != (P2.DIGEST,)
+            or not isinstance(mp.depth, int) or mp.depth < 0
+            or mp.depth > 40):
+        return False
+    if idx.shape[0] == 0:
+        return False
+    if idx.min() < 0 or idx.max() >= (1 << mp.depth):
+        return False
+    if np.any(np.diff(idx) <= 0):        # sorted + unique is canonical
+        return False
+    digests = {int(i): P2.hash_elems(jnp.asarray(leaves[k]))
+               for k, i in enumerate(idx)}
+    cursor = 0
+    for d in range(mp.depth):
+        kset = set(digests)
+        level_needed = sorted({p ^ 1 for p in kset} - kset)
+        for p in level_needed:
+            if cursor >= nodes.shape[0]:
+                return False
+            digests[p] = jnp.asarray(nodes[cursor])
+            cursor += 1
+        nxt = {}
+        for p in sorted({q >> 1 for q in kset}):
+            nxt[p] = P2.compress(digests[2 * p], digests[2 * p + 1])
+        digests = nxt
+    if cursor != nodes.shape[0]:         # extra nodes = non-canonical proof
+        return False
+    return bool(np.array_equal(np.asarray(digests[0]), np.asarray(root)))
+
+
 def verify_paths_batch(root: np.ndarray, leaves: jnp.ndarray,
                        paths: List[MerklePath]) -> bool:
     """Verify many authentication paths with one compress per level

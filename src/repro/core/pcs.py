@@ -11,8 +11,24 @@ An evaluation of the multilinear extension V(r) factors through the matrix:
 V(r) = b^T M a with a = eq(r_cols), b = eq(r_rows). The prover reveals
 u = b^T M; by row-linearity of the code, Enc(u) must agree with b^T Enc(M)
 at every column, which the verifier spot-checks on `queries` random columns
-(opened against the Merkle root). A dedicated random-combination proximity
-row is included to enforce that all rows are close to codewords.
+(opened against the Merkle root).
+
+Openings come in two flavours:
+
+* k <= 1 points — the classic Ligero opening: one u row per point plus a
+  dedicated random-combination proximity row.
+* k >= 2 points — wire-batched: the k evaluation claims are folded with a
+  transcript challenge gamma into a single sum-check over
+  sum_z M~(z) * E(z),  E(z) = sum_i gamma^i eq(z, q_i),
+  whose reduced point pt is transcript-random.  Only ONE u row (at pt) ships
+  regardless of k, and no separate proximity row is needed: a tensor query
+  at a random point doubles as the proximity test (Diamond–Posen style
+  tensor-query soundness).  For the toy model this is the difference between
+  233 u rows and 1.
+
+Column openings can either carry inline Merkle paths (v1 wire) or be looked
+up in a pre-verified :class:`ColumnStore` (v2 wire, one multiproof per root
+per attestation) — pass ``store=`` to :func:`verify_openings`.
 
 Soundness knobs: `security_bits(params)` reports the query-phase error
 (1+rho)/2 per query — the standard Ligero distance bound — plus the field
@@ -22,7 +38,7 @@ from __future__ import annotations
 
 import dataclasses
 import math
-from typing import List, Sequence, Tuple
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 import jax.numpy as jnp
@@ -30,7 +46,8 @@ import jax.numpy as jnp
 from . import field as F
 from . import merkle as M
 from . import ntt as N
-from .mle import eq_points, fsum, partial_eval_rows
+from . import sumcheck as SC
+from .mle import eq_eval, eq_points, fsum, partial_eval_rows
 from .transcript import Transcript
 
 
@@ -60,23 +77,70 @@ class Commitment:
 
 @dataclasses.dataclass
 class OpeningBundle:
-    us: np.ndarray          # (k, C, 4) — one u per opened point
-    u_prox: np.ndarray      # (C, 4) — proximity row rho^T M
-    columns: np.ndarray     # (t, R) — opened encoded columns
-    paths: List[M.MerklePath]
+    """PCS opening payload.
+
+    Legacy (k <= 1 points): us has one row per point, u_prox is present,
+    batch_sc is None.  Batched (k >= 2): us is the single reduced row,
+    u_prox is None, batch_sc carries the claim-folding sum-check.
+    columns/paths are None when the columns travel out-of-band in a
+    ColumnStore (v2 wire)."""
+    us: np.ndarray                       # (k or 1, C, 4)
+    u_prox: Optional[np.ndarray]         # (C, 4) or None (batched)
+    columns: Optional[np.ndarray]        # (t, R) or None (store mode)
+    paths: Optional[List[M.MerklePath]]  # None in store mode
+    batch_sc: Optional[SC.SumcheckProof] = None
 
 
-def shape_for(n_elems: int) -> Tuple[int, int]:
+class ColumnStore:
+    """Per-root verified column cache for deduplicated openings.
+
+    A v2 attestation ships, per Merkle root, ONE multiproof covering every
+    queried column of every bundle that opens against that root — shared
+    authentication-path prefixes are shipped once.  After the multiproof is
+    checked (merkle.verify_multiproof) its columns are registered here and
+    verify_openings(store=...) gathers them instead of re-verifying paths."""
+
+    def __init__(self):
+        self._cols: Dict[bytes, Dict[int, np.ndarray]] = {}
+
+    def add_root(self, root: np.ndarray, indices: Sequence[int],
+                 columns: np.ndarray) -> None:
+        d = self._cols.setdefault(np.asarray(root).tobytes(), {})
+        for i, col in zip(indices, np.asarray(columns)):
+            d[int(i)] = col
+
+    def has_root(self, root: np.ndarray) -> bool:
+        return np.asarray(root).tobytes() in self._cols
+
+    def gather(self, root: np.ndarray, idx: Sequence[int], n_rows: int
+               ) -> Optional[jnp.ndarray]:
+        d = self._cols.get(np.asarray(root).tobytes())
+        if d is None:
+            return None
+        rows = []
+        for j in idx:
+            col = d.get(int(j))
+            if col is None or col.shape != (n_rows,):
+                return None
+            rows.append(col)
+        if not rows:
+            return None
+        return jnp.asarray(np.stack(rows).astype(np.uint32))
+
+
+def shape_for(n_elems: int, aspect: int = 0) -> Tuple[int, int]:
+    """Matrix shape for an n-element vector.  aspect > 0 skews toward more
+    rows (R = 2^aspect * C), trading u-row bytes for column bytes."""
     m = max((n_elems - 1).bit_length(), 0) if n_elems > 1 else 0
-    log_c = (m + 1) // 2
+    log_c = max(0, (m + 1) // 2 - aspect)
     log_r = m - log_c
     return log_r, log_c
 
 
-def commit(vec: jnp.ndarray, params: PCSParams) -> Commitment:
+def commit(vec: jnp.ndarray, params: PCSParams, aspect: int = 0) -> Commitment:
     """vec: flat base-field (Montgomery uint32) array; zero-padded to 2^m."""
     n = vec.shape[0]
-    log_r, log_c = shape_for(n)
+    log_r, log_c = shape_for(n, aspect)
     total = 1 << (log_r + log_c)
     if total != n:
         vec = jnp.concatenate([vec, jnp.zeros((total - n,), jnp.uint32)])
@@ -128,10 +192,23 @@ def _encode_f4_row(u: jnp.ndarray, blowup: int) -> jnp.ndarray:
     return N.rs_encode(u.T, blowup).T
 
 
+def _gamma_fold(values: Sequence[jnp.ndarray], gamma: jnp.ndarray
+                ) -> jnp.ndarray:
+    """sum_i gamma^i * values[i], values (4,) each."""
+    acc = jnp.zeros((4,), jnp.uint32)
+    w = F.f4one(())
+    for v in values:
+        acc = F.f4add(acc, F.f4mul(w, jnp.asarray(v)))
+        w = F.f4mul(w, gamma)
+    return acc
+
+
 def prove_openings(com: Commitment, points: Sequence[jnp.ndarray],
                    transcript: Transcript, params: PCSParams) -> OpeningBundle:
-    """Open the commitment at each point. Transcript order: u's, proximity
-    row, then query indices (indices are drawn by the transcript itself)."""
+    """Open the commitment at each point (batched when >= 2 points)."""
+    points = [jnp.asarray(p) for p in points]
+    if len(points) >= 2:
+        return _prove_openings_batched(com, points, transcript, params)
     us = []
     for point in points:
         r_rows = point[:com.log_r]
@@ -150,14 +227,84 @@ def prove_openings(com: Commitment, points: Sequence[jnp.ndarray],
                          u_prox=np.asarray(u_prox), columns=columns, paths=paths)
 
 
+def _prove_openings_batched(com: Commitment, points: Sequence[jnp.ndarray],
+                            transcript: Transcript, params: PCSParams
+                            ) -> OpeningBundle:
+    """gamma-fold all claims into one sum-check, open once at its point."""
+    values = []
+    for p in points:
+        v = eval_at(com, p)
+        transcript.absorb(v)
+        values.append(v)
+    gamma = transcript.challenge_f4()
+    n_tot = com.mat.size
+    m_lift = F.f4_from_base(com.mat.reshape(-1))             # (N, 4)
+    e_vec = jnp.zeros((n_tot, 4), jnp.uint32)
+    w = F.f4one(())
+    for p in points:
+        term = F.f4mul(jnp.broadcast_to(w, (n_tot, 4)), eq_points(p))
+        e_vec = F.f4add(e_vec, term)
+        w = F.f4mul(w, gamma)
+    sc, pt = SC.prove([m_lift, e_vec], transcript)
+    u = partial_eval_rows(com.mat, pt[:com.log_r])           # (C, 4)
+    transcript.absorb(u)
+    n_cols = com.enc.shape[1]
+    idx = transcript.challenge_indices(n_cols, params.queries)
+    columns = np.asarray(com.enc.T[idx])                     # (t, R)
+    paths = M.batch_open(com.tree, idx)
+    return OpeningBundle(us=np.asarray(u)[None], u_prox=None,
+                         columns=columns, paths=paths, batch_sc=sc)
+
+
+def _gather_columns(root: np.ndarray, idx: np.ndarray, bundle: OpeningBundle,
+                    store: Optional[ColumnStore], n_rows: int,
+                    params: PCSParams) -> Optional[jnp.ndarray]:
+    """Resolve the queried columns, either from inline paths or a store.
+
+    In store mode the bundle MUST NOT carry inline columns/paths — otherwise
+    an attestation could smuggle unverified columns past the multiproof."""
+    if store is not None:
+        if bundle.columns is not None or bundle.paths:
+            return None
+        return store.gather(root, idx, n_rows)
+    if (not isinstance(bundle.columns, np.ndarray)
+            or bundle.columns.shape != (len(idx), n_rows)
+            or bundle.columns.dtype != np.uint32):
+        return None
+    if bundle.paths is None or len(bundle.paths) != len(idx):
+        return None
+    for j, path in zip(idx, bundle.paths):
+        if path.index != int(j):
+            return None
+    cols = jnp.asarray(bundle.columns)                       # (t, R)
+    if not M.verify_paths_batch(root, cols, bundle.paths):
+        return None
+    return cols
+
+
 def verify_openings(root: np.ndarray, log_r: int, log_c: int,
                     points: Sequence[jnp.ndarray],
                     claimed_values: Sequence[jnp.ndarray],
                     bundle: OpeningBundle, transcript: Transcript,
-                    params: PCSParams) -> bool:
+                    params: PCSParams,
+                    store: Optional[ColumnStore] = None) -> bool:
+    if not isinstance(bundle, OpeningBundle):
+        return False
+    if len(points) >= 2:
+        return _verify_openings_batched(root, log_r, log_c, points,
+                                        claimed_values, bundle, transcript,
+                                        params, store)
     R, C = 1 << log_r, 1 << log_c
     n_cols = C * params.blowup
-    if bundle.us.shape[0] != len(points):
+    if bundle.batch_sc is not None:
+        return False
+    if (not isinstance(bundle.us, np.ndarray) or bundle.us.ndim != 3
+            or bundle.us.shape != (len(points), C, 4)
+            or bundle.us.dtype != np.uint32):
+        return False
+    if (not isinstance(bundle.u_prox, np.ndarray)
+            or bundle.u_prox.shape != (C, 4)
+            or bundle.u_prox.dtype != np.uint32):
         return False
     # 1. absorb u rows in order, checking the claimed evaluations
     enc_us = []
@@ -178,13 +325,8 @@ def verify_openings(root: np.ndarray, log_r: int, log_c: int,
     enc_prox = _encode_f4_row(u_prox, params.blowup)
     # 3. queries — fully vectorized over the t query columns
     idx = transcript.challenge_indices(n_cols, params.queries)
-    if bundle.columns.shape != (params.queries, R):
-        return False
-    for q, (j, path) in enumerate(zip(idx, bundle.paths)):
-        if path.index != int(j):
-            return False
-    cols = jnp.asarray(bundle.columns)                       # (t, R)
-    if not M.verify_paths_batch(root, cols, bundle.paths):
+    cols = _gather_columns(root, idx, bundle, store, R, params)
+    if cols is None:
         return False
     cols4 = cols[:, :, None]                                 # (t, R, 1)
     idx_np = np.asarray(idx)
@@ -199,34 +341,59 @@ def verify_openings(root: np.ndarray, log_r: int, log_c: int,
     return True
 
 
-# ---------------------------------------------------------------------------
-# Fp4-valued witnesses (LogUp inverse columns): 4 coefficient commitments.
-# ---------------------------------------------------------------------------
-@dataclasses.dataclass
-class CommitmentF4:
-    coeffs: List[Commitment]     # 4 base-field commitments
-
-    @property
-    def roots(self) -> np.ndarray:
-        return np.stack([c.root for c in self.coeffs])
-
-
-def commit_f4(vec4: jnp.ndarray, params: PCSParams) -> CommitmentF4:
-    return CommitmentF4(coeffs=[commit(vec4[:, i], params) for i in range(4)])
-
-
-def eval_f4_at(com: CommitmentF4, point: jnp.ndarray) -> jnp.ndarray:
-    """MLE eval of the Fp4-valued vector: sum_k x^k * V_k(point)."""
-    acc = None
-    for k, c in enumerate(com.coeffs):
-        vk = eval_at(c, point)                               # (4,)
-        basis = F.f4zero(()).at[k].set(np.uint32(F.R_MOD_P))
-        term = F.f4mul(vk, basis)
-        acc = term if acc is None else F.f4add(acc, term)
-    return acc
+def _verify_openings_batched(root: np.ndarray, log_r: int, log_c: int,
+                             points: Sequence[jnp.ndarray],
+                             claimed_values: Sequence[jnp.ndarray],
+                             bundle: OpeningBundle, transcript: Transcript,
+                             params: PCSParams,
+                             store: Optional[ColumnStore]) -> bool:
+    R, C = 1 << log_r, 1 << log_c
+    n_cols = C * params.blowup
+    if not isinstance(bundle.batch_sc, SC.SumcheckProof):
+        return False
+    if bundle.u_prox is not None:
+        return False
+    if (not isinstance(bundle.us, np.ndarray)
+            or bundle.us.shape != (1, C, 4)
+            or bundle.us.dtype != np.uint32):
+        return False
+    # 1. fold the k claims with gamma; the sum-check proves
+    #    sum_z M~(z) E(z) = sum_i gamma^i v_i
+    for v in claimed_values:
+        transcript.absorb(jnp.asarray(v))
+    gamma = transcript.challenge_f4()
+    s = _gamma_fold(claimed_values, gamma)
+    if bundle.batch_sc.round_polys.shape[:1] != (log_r + log_c,):
+        return False
+    ok, pt, finals = SC.verify(s, bundle.batch_sc, 2, transcript)
+    if not ok:
+        return False
+    # E(pt) the verifier computes itself — eq_eval is O(m) per point
+    e_pt = _gamma_fold([eq_eval(jnp.asarray(p), pt) for p in points], gamma)
+    if not np.array_equal(np.asarray(finals[1]), np.asarray(e_pt)):
+        return False
+    # 2. the single u row must reproduce M~(pt)
+    u = jnp.asarray(bundle.us[0])
+    transcript.absorb(u)
+    got = fsum(F.f4mul(u, eq_points(pt[log_r:])), axis=0)
+    if not np.array_equal(np.asarray(got), np.asarray(finals[0])):
+        return False
+    # 3. spot-check Enc(u) against the committed columns.  pt is
+    #    transcript-random, so the tensor query doubles as the proximity
+    #    test — no separate u_prox row.
+    idx = transcript.challenge_indices(n_cols, params.queries)
+    cols = _gather_columns(root, idx, bundle, store, R, params)
+    if cols is None:
+        return False
+    b = eq_points(pt[:log_r])                                # (R, 4)
+    enc_u = _encode_f4_row(u, params.blowup)                 # (n_cols, 4)
+    lhs = fsum(F.fmul(b[None], cols[:, :, None]), axis=1)    # (t, 4)
+    return bool(np.array_equal(np.asarray(lhs),
+                               np.asarray(enc_u[np.asarray(idx)])))
 
 
 def combine_f4_values(values: Sequence[jnp.ndarray]) -> jnp.ndarray:
+    """sum_k x^k * values[k] — recombine per-coefficient claims into Fp4."""
     acc = None
     for k, vk in enumerate(values):
         basis = F.f4zero(()).at[k].set(np.uint32(F.R_MOD_P))

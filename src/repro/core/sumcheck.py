@@ -53,7 +53,13 @@ def _fold_kernel(los: Tuple[jnp.ndarray, ...], diffs: Tuple[jnp.ndarray, ...],
 
 @dataclasses.dataclass
 class SumcheckProof:
-    round_polys: np.ndarray   # (m, d+1, 4) uint32 — g_t evaluated at X=0..d
+    """Wire-compressed sum-check transcript.
+
+    round_polys stores only g_t(1..d); g_t(0) is implied by the running sum
+    (g(0) = S - g(1)), so the verifier reconstructs it instead of checking
+    it — one field element per round saved, identical soundness.
+    """
+    round_polys: np.ndarray   # (m, d, 4) uint32 — g_t evaluated at X=1..d
     final_evals: np.ndarray   # (num_factors, 4) uint32 — P_t(rho)
 
 
@@ -88,7 +94,7 @@ def prove(factors: Sequence[jnp.ndarray], transcript: Transcript
     factors = tuple(factors)
     for _ in range(m):
         g, los, diffs = _round_kernel(factors)
-        round_polys.append(np.asarray(g))
+        round_polys.append(np.asarray(g)[1:])   # g(0) implied by running sum
         transcript.absorb(g)
         c = transcript.challenge_f4()
         challenges.append(c)
@@ -101,7 +107,7 @@ def prove(factors: Sequence[jnp.ndarray], transcript: Transcript
     # sequence in order.
     point = jnp.stack(challenges) if m else jnp.zeros((0, 4), jnp.uint32)
     return SumcheckProof(round_polys=np.stack(round_polys) if m else
-                         np.zeros((0, d + 1, 4), np.uint32),
+                         np.zeros((0, d, 4), np.uint32),
                          final_evals=np.asarray(final_evals)), point
 
 
@@ -138,18 +144,22 @@ def verify(claimed_sum: jnp.ndarray, proof: SumcheckProof, num_factors: int,
     Returns (ok, point (m,4), final_evals (d,4)). The caller must separately
     validate each final factor evaluation (via PCS openings / direct evals).
     """
+    if (not isinstance(proof.round_polys, np.ndarray)
+            or proof.round_polys.ndim != 3
+            or proof.round_polys.dtype != np.uint32):
+        return False, None, None
     m = proof.round_polys.shape[0]
     d = num_factors
     running = jnp.asarray(claimed_sum)
     challenges = []
     for t in range(m):
-        g = jnp.asarray(proof.round_polys[t])
-        if g.shape != (d + 1, 4):
+        g_tail = jnp.asarray(proof.round_polys[t])
+        if g_tail.shape != (d, 4):
             return False, None, None
-        # g(0) + g(1) must equal the running sum
-        s01 = F.f4add(g[0], g[1])
-        if not np.array_equal(np.asarray(s01), np.asarray(running)):
-            return False, None, None
+        # g(0) is implied: g(0) = running - g(1). Reconstruct the full poly
+        # so the transcript absorbs exactly what the prover absorbed.
+        g0 = F.f4sub(running, g_tail[0])
+        g = jnp.concatenate([g0[None, :], g_tail], axis=0)
         transcript.absorb(g)
         c = transcript.challenge_f4()
         challenges.append(c)

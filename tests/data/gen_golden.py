@@ -1,0 +1,63 @@
+"""Regenerate the golden wire-format vectors (run from the repo root):
+
+    PYTHONPATH=src python tests/data/gen_golden.py
+
+Produces, under tests/data/:
+
+    golden_card.bin   ModelCard envelope for the 1-layer golden model
+    golden_query.bin  codec envelope holding the canonical query matrix
+    golden_v1.bin     legacy v1 attestation envelope (inline Merkle paths)
+    golden_v2.bin     v2 framed stream (deduplicated multiproofs)
+
+Everything is derived from fixed seeds and Fiat-Shamir, so the bytes are
+reproducible; regenerate ONLY on a deliberate wire-format break and call
+it out in the commit message (old receipts stop verifying otherwise).
+"""
+import os
+import sys
+
+import numpy as np
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "..",
+                                "src"))
+
+from repro import api                                   # noqa: E402
+from repro.api import codec                             # noqa: E402
+from repro.core import blocks as B                      # noqa: E402
+
+HERE = os.path.dirname(os.path.abspath(__file__))
+CFG = B.BlockCfg(family="gpt2", d=8, dff=16, heads=1, kv_heads=1, dh=8,
+                 seq=4)
+QUERIES = 1
+
+
+def main():
+    rng = np.random.default_rng(1234)
+    weights = [B.init_weights(CFG, rng)]
+    qrng = np.random.default_rng(5678)
+    query = np.clip(
+        np.round(qrng.normal(0, 0.5, (CFG.d_pad, CFG.seq)) * 256),
+        -32768, 32767).astype(np.int64)
+    policy = api.VerifyPolicy(pcs_queries=QUERIES)
+    with api.ProofService([CFG], weights, default_queries=QUERIES,
+                          workers=1, name="golden-model") as svc:
+        att = svc.attest(query, policy,
+                         tokens=np.arange(3, dtype=np.int32))
+        card = svc.model_card.to_bytes()
+    out = {
+        "golden_card.bin": card,
+        "golden_query.bin": codec.pack(b"QURY", query),
+        "golden_v1.bin": att.to_bytes(1),
+        "golden_v2.bin": att.to_bytes(2),
+    }
+    for name, data in out.items():
+        with open(os.path.join(HERE, name), "wb") as fh:
+            fh.write(data)
+        print(f"{name}: {len(data)} B")
+    rep = api.verify(out["golden_v2.bin"], query, card, policy=policy)
+    print(f"self-check: ok={rep.ok} reason={rep.reason!r}")
+    assert rep.ok
+
+
+if __name__ == "__main__":
+    main()

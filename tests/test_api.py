@@ -52,7 +52,19 @@ def attestation(service, query, policy):
 
 @pytest.fixture(scope="module")
 def wire(attestation):
-    return attestation.to_bytes()
+    """Legacy v1 envelope (inline Merkle paths)."""
+    return attestation.to_bytes(1)
+
+
+@pytest.fixture(scope="module")
+def wire2(attestation):
+    """Default v2 framed stream (deduplicated multiproofs)."""
+    return attestation.to_bytes(2)
+
+
+@pytest.fixture(scope="module")
+def card_bytes(service):
+    return service.model_card.to_bytes()
 
 
 # ---------------------------------------------------------------------------
@@ -139,13 +151,36 @@ def test_attestation_roundtrip_all_fields(attestation, wire):
     # the decoded copy holds np — values, dtypes, shapes must agree)
     assert codec.encode_obj([lp.tape for lp in att.proof.layer_proofs]) == \
         codec.encode_obj([lp.tape for lp in attestation.proof.layer_proofs])
-    # reported size is the ENCODED size
-    assert attestation.size_bytes == len(wire)
-    assert attestation.bytes_per_layer == len(wire) / L
+    # reported size is the ENCODED size of the default (v2) container
+    assert attestation.size_bytes == len(attestation.to_bytes(2))
+    assert attestation.bytes_per_layer == attestation.size_bytes / L
     # decode -> re-encode is canonical (bypassing the wire cache), which
     # is what lets from_bytes prime the cache with the input bytes
     from repro.api import types as api_types
     assert codec.pack(api_types.KIND_ATTESTATION, att) == wire
+
+
+def test_attestation_v2_roundtrip(attestation, wire, wire2):
+    """The framed v2 container decodes to the SAME attestation: metadata,
+    tape contents, and per-layer multiproof stores all survive."""
+    att = api.Attestation.from_bytes(wire2)
+    ref = api.Attestation.from_bytes(wire)
+    assert att.model_id == ref.model_id
+    assert att.policy == ref.policy
+    assert att.proved_layers == ref.proved_layers
+    np.testing.assert_array_equal(att.tokens, ref.tokens)
+    # v2 strips inline columns/paths into per-layer stores
+    stores = att.layer_stores()
+    assert stores is not None and len(stores) == L
+    assert all(st for st in stores)
+    for lp in att.proof.layer_proofs:
+        for item in lp.tape:
+            if item[0] == "open":
+                assert item[2].columns is None and item[2].paths is None
+    # the dedup must actually pay: v2 strictly smaller than v1
+    assert len(wire2) < len(wire)
+    # re-encode of the decoded stream is byte-identical (wire cache primed)
+    assert att.to_bytes(2) == wire2
 
 
 def test_verify_from_wire_accepts(service, query, policy, wire):
@@ -155,6 +190,25 @@ def test_verify_from_wire_accepts(service, query, policy, wire):
     assert report.reason == ""
     assert report.checked_layers == L
     assert bool(report) is True
+
+
+def test_verify_v2_wire_accepts(service, query, policy, wire2, card_bytes):
+    report = api.verify(wire2, query, card_bytes, policy=policy)
+    assert report.ok, report.reason
+    assert report.checked_layers == L
+    assert report.complete
+
+
+def test_min_wire_version_policy(attestation, query, card_bytes):
+    """A client can demand the framed container: v1 bytes are rejected
+    with a reason, v2 bytes still verify."""
+    pol2 = dataclasses.replace(attestation.policy, min_wire_version=2)
+    att2 = dataclasses.replace(attestation, policy=pol2)
+    rep1 = api.verify(att2.to_bytes(1), query, card_bytes, policy=pol2)
+    assert not rep1.ok
+    assert "below the policy minimum" in rep1.reason
+    rep2 = api.verify(att2.to_bytes(2), query, card_bytes, policy=pol2)
+    assert rep2.ok, rep2.reason
 
 
 def test_service_stays_resident(service, query, policy, attestation):
@@ -168,14 +222,50 @@ def test_service_stays_resident(service, query, policy, attestation):
 # ---------------------------------------------------------------------------
 # Tamper evidence: one flipped byte per wire section -> clean rejection.
 # ---------------------------------------------------------------------------
-def _flip_in_section(wire, section_obj, card, query):
-    """Flip one byte inside the encoded span of `section_obj`."""
-    span = codec.encode_obj(section_obj)
-    off = wire.find(span)
-    assert off > 0, "section not found in wire encoding"
+def _flip_in_section(wire, attestation, mutate, card, query):
+    """Flip one byte inside a section, located by re-encoding the
+    attestation with `mutate` applied and diffing the two BODIES (the
+    string-interning table makes a section's standalone encoding differ
+    from its in-stream bytes, so substring search can't find it)."""
+    w2 = mutate(attestation).to_bytes(1)
+    hdr = 49                               # MAGIC|ver|kind|digest|len
+    off = next(i for i in range(hdr, min(len(wire), len(w2)))
+               if wire[i] != w2[i])
     bad = bytearray(wire)
-    bad[off + len(span) - 1] ^= 0x20       # inside the section payload
+    bad[off] ^= 0x20                       # inside the section payload
     return api.verify(bytes(bad), query, card)
+
+
+def _bump_tokens(a):
+    t = np.asarray(a.tokens).copy()
+    t[0] += 1
+    return dataclasses.replace(a, tokens=t)
+
+
+def _bump_root(a):
+    roots = [np.asarray(r).copy() for r in a.proof.boundary_roots]
+    roots[1][0] ^= 1
+    return dataclasses.replace(
+        a, proof=dataclasses.replace(a.proof, boundary_roots=roots))
+
+
+def _bump_layer_proof(a):
+    lp = a.proof.layer_proofs[0]
+    tape = list(lp.tape)
+    for i, item in enumerate(tape):
+        if item[0] == "val":
+            v = np.array(item[1]).copy()
+            v.flat[0] ^= 1
+            tape[i] = ("val", v)
+            break
+    lps = [dataclasses.replace(lp, tape=tape)] + list(a.proof.layer_proofs[1:])
+    return dataclasses.replace(
+        a, proof=dataclasses.replace(a.proof, layer_proofs=lps))
+
+
+def _bump_policy(a):
+    return dataclasses.replace(
+        a, policy=dataclasses.replace(a.policy, budget=a.policy.budget / 2))
 
 
 @pytest.mark.parametrize("section", ["tokens", "boundary_root",
@@ -183,11 +273,11 @@ def _flip_in_section(wire, section_obj, card, query):
 def test_byte_flip_each_section_rejected(section, attestation, wire,
                                          service, query):
     card = service.model_card
-    obj = {"tokens": lambda a: a.tokens,
-           "boundary_root": lambda a: a.proof.boundary_roots[1],
-           "layer_proof": lambda a: a.proof.layer_proofs[0],
-           "policy": lambda a: a.policy}[section](attestation)
-    report = _flip_in_section(wire, obj, card, query)
+    mutate = {"tokens": _bump_tokens,
+              "boundary_root": _bump_root,
+              "layer_proof": _bump_layer_proof,
+              "policy": _bump_policy}[section]
+    report = _flip_in_section(wire, attestation, mutate, card, query)
     assert not report.ok
     assert report.reason                    # human-readable, not a crash
     assert "decode failed" in report.reason or "digest" in report.reason
@@ -208,7 +298,9 @@ def test_object_tamper_adjacency_rejected(attestation, service, query, wire):
 
 
 def test_object_tamper_tape_rejected(attestation, service, query):
-    att = api.Attestation.from_bytes(attestation.to_bytes())
+    # v1 decode: self-contained layer proofs (inline paths), so
+    # dataclasses.replace() keeps the object verifiable/mutable
+    att = api.Attestation.from_bytes(attestation.to_bytes(1))
     lp = att.proof.layer_proofs[0]
     tape = list(lp.tape)
     for i, item in enumerate(tape):
@@ -257,7 +349,9 @@ def test_tampered_pcs_queries_clean_failure(attestation, service, query):
     """Attacker rewrites the embedded policy's query count: verification
     must FAIL with a reason, not crash (the old verify_response would
     just use its own default and crash or mis-verify)."""
-    att = api.Attestation.from_bytes(attestation.to_bytes())
+    # v1 decode: self-contained layer proofs (inline paths), so
+    # dataclasses.replace() keeps the object verifiable/mutable
+    att = api.Attestation.from_bytes(attestation.to_bytes(1))
     bad = dataclasses.replace(
         att, policy=dataclasses.replace(att.policy, pcs_queries=QUERIES + 2))
     report = api.verify(bad, query, service.model_card)
@@ -266,7 +360,9 @@ def test_tampered_pcs_queries_clean_failure(attestation, service, query):
 
 
 def test_budget_accounting_rejects_underproven(attestation, service, query):
-    att = api.Attestation.from_bytes(attestation.to_bytes())
+    # v1 decode: self-contained layer proofs (inline paths), so
+    # dataclasses.replace() keeps the object verifiable/mutable
+    att = api.Attestation.from_bytes(attestation.to_bytes(1))
     # claim full budget but drop one layer proof
     pruned = dataclasses.replace(
         att,
@@ -281,7 +377,9 @@ def test_budget_accounting_rejects_underproven(attestation, service, query):
 def test_malformed_field_types_clean_failure(attestation, service, query):
     """The codec rebuilds dataclasses without type validation; verify
     must treat every field as attacker-typed and reject, not crash."""
-    att = api.Attestation.from_bytes(attestation.to_bytes())
+    # v1 decode: self-contained layer proofs (inline paths), so
+    # dataclasses.replace() keeps the object verifiable/mutable
+    att = api.Attestation.from_bytes(attestation.to_bytes(1))
     bad = dataclasses.replace(att, proved_layers=5)       # not a list
     rep = api.verify(bad, query, service.model_card)
     assert not rep.ok and "malformed attestation" in rep.reason
@@ -293,7 +391,9 @@ def test_deterministic_selector_enforced(attestation, service, query):
     """A prover must not choose which layers get audited: for the
     recomputable selectors (uniform/random) the proved subset has to
     match the policy's own selection (paper §5.2)."""
-    att = api.Attestation.from_bytes(attestation.to_bytes())
+    # v1 decode: self-contained layer proofs (inline paths), so
+    # dataclasses.replace() keeps the object verifiable/mutable
+    att = api.Attestation.from_bytes(attestation.to_bytes(1))
     sel_pol = dataclasses.replace(att.policy, budget=0.5,
                                   selector="uniform")
     # uniform selection at L=2, k=1 picks layer 0; prover offers layer 1
@@ -316,7 +416,9 @@ def test_deterministic_selector_enforced(attestation, service, query):
 def test_audit_layers_enforced(attestation, service, query):
     """A prover must not drop the policy's random-audit layers: the
     enforceable floor is budget layers + audits (paper §5.2)."""
-    att = api.Attestation.from_bytes(attestation.to_bytes())
+    # v1 decode: self-contained layer proofs (inline paths), so
+    # dataclasses.replace() keeps the object verifiable/mutable
+    att = api.Attestation.from_bytes(attestation.to_bytes(1))
     pol = dataclasses.replace(att.policy, budget=0.5, audit_random=1)
     dropped = dataclasses.replace(
         att, policy=pol, proved_layers=[att.proof.layer_proofs[0].layer_index],
@@ -355,6 +457,113 @@ def test_legacy_verify_response_uses_prover_queries(attestation, service,
     # explicit mismatched count -> clean False, not a crash
     assert not SRV.verify_response([CFG] * L, resp, roots,
                                    pcs_queries=QUERIES + 2, x0=query)
+
+
+# ---------------------------------------------------------------------------
+# Streaming verification (v2 framed container, api.StreamingVerifier).
+# ---------------------------------------------------------------------------
+def _frame_edges(stream: bytes):
+    """Byte offsets where each frame of a v2 stream begins/ends."""
+    import struct
+    edges = []
+    pos = 9                                     # MAGIC2 | ver | kind
+    while pos < len(stream):
+        edges.append(pos)
+        (blen,) = struct.unpack(">Q", stream[pos + 4:pos + 12])
+        pos += 4 + 8 + 32 + blen
+    edges.append(len(stream))
+    return edges
+
+
+def _report_key(rep):
+    return (rep.ok, rep.reason, rep.checked_layers, rep.model_id,
+            rep.proved_layers, rep.complete)
+
+
+def test_streaming_matches_one_shot(query, policy, wire2, card_bytes):
+    """Chunked verification must reach the same verdict as one-shot
+    api.verify — same ok bit, reason, and layer accounting."""
+    one = api.verify(wire2, query, card_bytes, policy=policy)
+    sv = api.StreamingVerifier(query, card_bytes, policy=policy)
+    reports = []
+    step = max(1, len(wire2) // 7)
+    for i in range(0, len(wire2), step):
+        reports += sv.feed(wire2[i:i + step])
+    fin = sv.finish()
+    assert fin.ok, fin.reason
+    assert _report_key(fin) == _report_key(one)
+    # interim snapshots are marked incomplete with monotone layer counts
+    interim = [r for r in reports if not r.complete]
+    assert interim and all(r.ok for r in interim)
+    counts = [r.checked_layers for r in interim]
+    assert counts == sorted(counts) and counts[-1] == L
+    # the END frame already carries the complete verdict
+    assert reports[-1].complete
+    assert _report_key(reports[-1]) == _report_key(fin)
+    assert fin.attestation_bytes == len(wire2)
+
+
+def test_streaming_chunk_boundaries_at_frame_edges(query, policy, wire2,
+                                                   card_bytes):
+    """Splitting the stream exactly at / one byte around a frame edge must
+    not change the verdict (frame reassembly is offset-independent)."""
+    edge = _frame_edges(wire2)[-2]              # last LAYR/END boundary
+    for cut in (edge - 1, edge, edge + 1):
+        sv = api.StreamingVerifier(query, card_bytes, policy=policy)
+        sv.feed(wire2[:cut])
+        sv.feed(wire2[cut:])
+        fin = sv.finish()
+        assert fin.ok, f"cut at {cut}: {fin.reason}"
+        assert fin.checked_layers == L
+
+
+def test_frame_reader_every_offset_around_edges():
+    """Codec-level exhaustive sweep: a synthetic stream reassembles
+    identically for EVERY split offset around every frame edge."""
+    frames = [(codec.FRAME_LAYER, {"layer_index": i,
+                                   "blob": np.arange(20 + i,
+                                                     dtype=np.uint32)})
+              for i in range(3)]
+    stream = codec.pack_stream(b"ATTN", {"meta": "x"}, frames)
+    for edge in _frame_edges(stream):
+        for delta in range(-4, 5):
+            cut = min(max(edge + delta, 0), len(stream))
+            fr = codec.FrameReader(b"ATTN")
+            got = fr.feed(stream[:cut]) + fr.feed(stream[cut:])
+            fr.finish()
+            kinds = [k for k, _ in got]
+            assert kinds == [codec.FRAME_HEAD] + [codec.FRAME_LAYER] * 3 \
+                + [codec.FRAME_END]
+            assert got[2][1]["layer_index"] == 1
+
+
+def test_streaming_out_of_order_rejected(query, policy, wire2, card_bytes):
+    """Delivering the layer-1 frame in layer-0's slot must be rejected
+    with a reasoned report, not verified or crashed."""
+    edges = _frame_edges(wire2)
+    # frames: [HEAD, LAYR0, LAYR1, END] — swap the two LAYR byte ranges
+    h0, l0, l1, end = edges[0], edges[1], edges[2], edges[3]
+    swapped = (wire2[:l0] + wire2[l1:end] + wire2[l0:l1] + wire2[end:])
+    assert len(swapped) == len(wire2) and swapped != wire2
+    sv = api.StreamingVerifier(query, card_bytes, policy=policy)
+    reports = sv.feed(swapped)
+    bad = [r for r in reports if not r.ok]
+    assert bad, "out-of-order frame was not rejected"
+    assert "out-of-order" in bad[0].reason \
+        or "substituted" in bad[0].reason
+    # the verifier is latched: finish() stays rejected
+    fin = sv.finish()
+    assert not fin.ok and fin.complete
+
+
+def test_streaming_truncated_rejected(query, policy, wire2, card_bytes):
+    """A stream missing its final chunk fails closed at finish()."""
+    sv = api.StreamingVerifier(query, card_bytes, policy=policy)
+    sv.feed(wire2[:-37])
+    fin = sv.finish()
+    assert not fin.ok
+    assert "truncat" in fin.reason
+    assert fin.complete
 
 
 # ---------------------------------------------------------------------------

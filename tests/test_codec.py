@@ -1,0 +1,117 @@
+"""Codec property tests: 31-bit packed field arrays + byte-flip rejection.
+
+Property-based (hypothesis, degrading to skips when it is absent — see
+hypothesis_compat) with deterministic rng-driven twins so the guarantees
+are exercised either way:
+
+* packed field-element arrays of ARBITRARY shape round-trip bit-exactly
+  (tag "P": 31-bit limbs, zero padding, canonical range enforced),
+* EVERY single-byte flip anywhere in an integrity envelope is rejected
+  with a ``CodecError`` — never a silent wrong decode, never a crash.
+"""
+import numpy as np
+import pytest
+from hypothesis_compat import given, settings, st
+
+from repro.api import codec
+
+P = 2013265921
+KIND = b"TEST"
+
+
+def _roundtrip_felts(a):
+    enc = codec.encode_obj(a)
+    assert enc[:1] == b"P", "field arrays must take the packed tag"
+    # 31 bits/limb + tag/ndim/dims overhead stays under 32 bits/limb
+    if a.size >= 64:
+        assert len(enc) < 4 * a.size
+    b = codec.decode_obj(enc)
+    assert b.dtype == np.uint32 and b.shape == a.shape
+    np.testing.assert_array_equal(a, b)
+
+
+@given(st.lists(st.integers(min_value=0, max_value=P - 1),
+                min_size=0, max_size=200),
+       st.integers(min_value=0, max_value=3))
+@settings(max_examples=100, deadline=None)
+def test_packed_felt_roundtrip_property(vals, ndim_extra):
+    a = np.array(vals, np.uint32)
+    # reshape into an arbitrary compatible shape (prepend unit dims)
+    a = a.reshape((1,) * ndim_extra + a.shape)
+    _roundtrip_felts(a)
+
+
+def test_packed_felt_roundtrip_shapes(rng):
+    for shape in [(0,), (1,), (7,), (64,), (3, 5), (2, 3, 4), (1, 1, 9),
+                  (4, 0), (31,), (32,), (33,)]:
+        a = rng.integers(0, P, shape).astype(np.uint32)
+        _roundtrip_felts(a)
+    # edge values incl. P-1 survive the range check
+    _roundtrip_felts(np.array([0, 1, P - 1], np.uint32))
+
+
+def test_packed_felt_rejects_out_of_field():
+    # >= P values take the raw "A" tag when encoded...
+    big = np.array([P], np.uint32)
+    assert codec.encode_obj(big)[:1] == b"A"
+    # ...and a forged packed stream carrying an out-of-field limb rejects
+    good = codec.encode_obj(np.array([P - 1], np.uint32))
+    forged = good[:-4] + codec._pack31(np.array([P], np.uint32))
+    assert len(forged) == len(good)
+    with pytest.raises(codec.CodecError):
+        codec.decode_obj(forged)
+
+
+def test_packed_felt_rejects_bad_padding(rng):
+    a = rng.integers(0, P, 5).astype(np.uint32)
+    enc = bytearray(codec.encode_obj(a))
+    enc[-1] |= 0x01                       # nonzero tail padding bit
+    with pytest.raises(codec.CodecError):
+        codec.decode_obj(bytes(enc))
+    with pytest.raises(codec.CodecError):  # truncated limb data
+        codec.decode_obj(bytes(enc[:-2]))
+
+
+@given(st.integers(min_value=0, max_value=10**6))
+@settings(max_examples=100, deadline=None)
+def test_envelope_flip_rejected_property(seed):
+    obj = {"n": seed, "xs": np.arange(seed % 17, dtype=np.uint32)}
+    wire = codec.pack(KIND, obj)
+    pos = seed % len(wire)
+    bad = bytearray(wire)
+    bad[pos] ^= 1 + (seed % 255)
+    with pytest.raises(codec.CodecError):
+        codec.unpack(KIND, bytes(bad))
+
+
+def test_envelope_every_single_byte_flip_rejected(rng):
+    """Exhaustive: flip every byte of a small envelope, all 8 bit masks
+    on a rotating schedule — decode must raise CodecError every time."""
+    obj = {"meta": "golden", "felts": rng.integers(0, P, 9).astype(np.uint32),
+           "raw": np.arange(-4, 4, dtype=np.int64), "tail": b"\x00\xff"}
+    wire = codec.pack(KIND, obj)
+    for pos in range(len(wire)):
+        bad = bytearray(wire)
+        bad[pos] ^= 1 << (pos % 8)
+        with pytest.raises(codec.CodecError):
+            codec.unpack(KIND, bytes(bad))
+
+
+def test_envelope_truncation_and_growth_rejected(rng):
+    wire = codec.pack(KIND, [1, "x", np.arange(3, dtype=np.uint32)])
+    for cut in (0, 1, len(wire) // 2, len(wire) - 1):
+        with pytest.raises(codec.CodecError):
+            codec.unpack(KIND, wire[:cut])
+    with pytest.raises(codec.CodecError):
+        codec.unpack(KIND, wire + b"\x00")
+    with pytest.raises(codec.CodecError):
+        codec.unpack(b"ELSE", wire)       # kind mismatch
+
+
+def test_varint_noncanonical_rejected():
+    # "B" tag + varint length: 0x80 0x00 is a non-canonical zero
+    with pytest.raises(codec.CodecError):
+        codec.decode_obj(b"B\x80\x00")
+    # shift cap: an unterminated 9-byte varint must not wrap silently
+    with pytest.raises(codec.CodecError):
+        codec.decode_obj(b"B" + b"\xff" * 9 + b"\x01")

@@ -1,0 +1,83 @@
+"""Golden wire-format vectors: committed canonical v1 + v2 attestations.
+
+These bytes were produced by ``tests/data/gen_golden.py`` (1-layer toy
+model, fixed seeds).  They pin the wire format itself: a codec change
+that still round-trips in-process but alters the byte layout breaks this
+test — which is the point.  Receipts in the wild must keep verifying.
+Regenerate the vectors only on a deliberate, called-out format break.
+"""
+import os
+
+import pytest
+
+from repro import api
+from repro.api import codec
+
+DATA = os.path.join(os.path.dirname(__file__), "data")
+QUERIES = 1
+
+
+def _load(name):
+    path = os.path.join(DATA, name)
+    if not os.path.exists(path):
+        pytest.skip(f"golden vector {name} not generated")
+    with open(path, "rb") as fh:
+        return fh.read()
+
+
+@pytest.fixture(scope="module")
+def golden():
+    return {name: _load(name) for name in
+            ("golden_card.bin", "golden_query.bin",
+             "golden_v1.bin", "golden_v2.bin")}
+
+
+@pytest.fixture(scope="module")
+def query(golden):
+    return codec.unpack(b"QURY", golden["golden_query.bin"])
+
+
+@pytest.fixture(scope="module")
+def policy():
+    return api.VerifyPolicy(pcs_queries=QUERIES)
+
+
+def test_golden_versions_sniff(golden):
+    assert codec.sniff_version(golden["golden_v1.bin"]) == 1
+    assert codec.sniff_version(golden["golden_v2.bin"]) == 2
+    assert golden["golden_v2.bin"][:4] == codec.MAGIC2
+
+
+def test_golden_v1_decodes_and_verifies(golden, query, policy):
+    att = api.Attestation.from_bytes(golden["golden_v1.bin"])
+    assert att.proved_layers == [0]
+    rep = api.verify(golden["golden_v1.bin"], query,
+                     golden["golden_card.bin"], policy=policy)
+    assert rep.ok, rep.reason
+    assert rep.checked_layers == 1
+
+
+def test_golden_v2_decodes_and_verifies(golden, query, policy):
+    att = api.Attestation.from_bytes(golden["golden_v2.bin"])
+    assert att.layer_stores() is not None
+    rep = api.verify(golden["golden_v2.bin"], query,
+                     golden["golden_card.bin"], policy=policy)
+    assert rep.ok, rep.reason
+    assert rep.checked_layers == 1
+
+
+def test_golden_reencode_is_byte_identical(golden):
+    """Canonical encoding: decode -> re-encode reproduces the committed
+    bytes exactly, for both wire versions."""
+    att1 = api.Attestation.from_bytes(golden["golden_v1.bin"])
+    assert att1.to_bytes(1) == golden["golden_v1.bin"]
+    att2 = api.Attestation.from_bytes(golden["golden_v2.bin"])
+    assert att2.to_bytes(2) == golden["golden_v2.bin"]
+
+
+def test_golden_versions_agree_on_metadata(golden):
+    a1 = api.Attestation.from_bytes(golden["golden_v1.bin"])
+    a2 = api.Attestation.from_bytes(golden["golden_v2.bin"])
+    assert a1.model_id == a2.model_id
+    assert a1.proved_layers == a2.proved_layers
+    assert len(a1.proof.layer_proofs) == len(a2.proof.layer_proofs)

@@ -1,4 +1,12 @@
-"""LogUp lookup argument + circuit gadget tests (incl. soundness)."""
+"""LogUp lookup argument + circuit gadget tests (incl. soundness).
+
+The lookup argument ships multiplicities in the clear (lookup.py): the
+prover writes ("m", counts) / ("msp", support, counts) tape objects, the
+verifier validates them with check_dense_counts / check_sparse_counts and
+computes the table side of the LogUp identity itself.  These tests cover
+the validators directly, the circuit-level roundtrip through
+flush_lookups, and rejection of tampered multiplicities.
+"""
 import numpy as np
 import jax.numpy as jnp
 import pytest
@@ -7,42 +15,67 @@ from repro.core import circuit as C
 from repro.core import field as F
 from repro.core import lookup as LK
 from repro.core import luts
-from repro.core import pcs as PCS
 from repro.core.mle import mle_eval_base
 from repro.core.transcript import Transcript
 
 
-def test_range_lookup_roundtrip(rng, params):
+# ---------------------------------------------------------------------------
+# Multiplicity validators (the verifier's only trust boundary for counts).
+# ---------------------------------------------------------------------------
+def test_dense_counts_roundtrip(rng):
     idx = rng.integers(0, 256, 64)
-    pf = LK.prove(idx, None, None, 8, Transcript("r"), params)
-    ok, pt, claim, _ = LK.verify(pf, 64, None, 8, Transcript("r"), params)
-    assert ok
-    assert np.array_equal(
-        np.asarray(mle_eval_base(F.f_from_int(idx), jnp.asarray(pt))),
-        claim)
+    m = LK.dense_counts(idx, 256)
+    assert m.sum() == 64
+    got = LK.check_dense_counts(m, 256, 64)
+    assert np.array_equal(got, m)
+    # uint32 (the wire dtype) validates identically
+    got32 = LK.check_dense_counts(m.astype(np.uint32), 256, 64)
+    assert got32.dtype == np.int64 and np.array_equal(got32, m)
 
 
-def test_pair_lookup_roundtrip(rng, params):
-    T = luts.table_q("rsqrt").astype(np.int64)
+def test_dense_counts_rejects_bad(rng):
+    idx = rng.integers(0, 256, 64)
+    m = LK.dense_counts(idx, 256)
+    with pytest.raises(LK.BadMultiplicities):
+        LK.check_dense_counts(m[:255], 256, 64)          # wrong length
+    with pytest.raises(LK.BadMultiplicities):
+        LK.check_dense_counts(m.astype(np.float64), 256, 64)
+    big = m.copy()
+    big[0] = 65                                          # > n_max
+    with pytest.raises(LK.BadMultiplicities):
+        LK.check_dense_counts(big, 256, 64)
+
+
+def test_sparse_counts_roundtrip(rng):
     idx = rng.integers(0, 1 << 16, 32)
-    out = T[idx]
-    pf = LK.prove(idx, out, T, 16, Transcript("p"), params)
-    ok, pt, ic, oc = LK.verify(pf, 32, T, 16, Transcript("p"), params)
-    assert ok
-    assert np.array_equal(
-        np.asarray(mle_eval_base(F.f_from_int(out), jnp.asarray(pt))), oc)
+    s, c = LK.sparse_counts(idx, 1 << 16)
+    assert c.sum() == 32
+    gs, gc = LK.check_sparse_counts(s, c, 1 << 16, 32)
+    assert np.array_equal(gs, s) and np.array_equal(gc, c)
+    gs, gc = LK.check_sparse_counts(s.astype(np.uint32),
+                                    c.astype(np.uint32), 1 << 16, 32)
+    assert np.array_equal(gs, s) and np.array_equal(gc, c)
 
 
-def test_pair_lookup_bad_pair_rejected(rng, params):
-    T = luts.table_q("rsqrt").astype(np.int64)
+def test_sparse_counts_rejects_bad(rng):
     idx = rng.integers(0, 1 << 16, 32)
-    out = T[idx].copy()
-    out[3] += 1                         # not a table pair any more
-    pf = LK.prove(idx, out, T, 16, Transcript("p"), params)
-    ok, *_ = LK.verify(pf, 32, T, 16, Transcript("p"), params)
-    assert not ok
+    s, c = LK.sparse_counts(idx, 1 << 16)
+    with pytest.raises(LK.BadMultiplicities):
+        LK.check_sparse_counts(s[::-1], c, 1 << 16, 32)  # not sorted
+    dup = np.concatenate([s[:1], s])
+    with pytest.raises(LK.BadMultiplicities):
+        LK.check_sparse_counts(dup, np.concatenate([c[:1], c]),
+                               1 << 16, 32)              # duplicate support
+    with pytest.raises(LK.BadMultiplicities):
+        LK.check_sparse_counts(s, np.zeros_like(c), 1 << 16, 32)  # count<1
+    with pytest.raises(LK.BadMultiplicities):
+        LK.check_sparse_counts(np.array([1 << 16]), np.array([1]),
+                               1 << 16, 32)              # index range
 
 
+# ---------------------------------------------------------------------------
+# Circuit roundtrips (gadgets + flush_lookups + batched PCS openings).
+# ---------------------------------------------------------------------------
 def _mini_circuit(ctx, A, B, out, err, n, k, m, witness):
     wb = C.WitnessBuilder("aux")
     a_l = wb.alloc_limbs("A", n * k, A if witness else None)
@@ -55,6 +88,7 @@ def _mini_circuit(ctx, A, B, out, err, n, k, m, witness):
     r = jnp.concatenate([r_i, r_j])
     C.g_rescale(ctx, acc, r, o_l.view(sl), e_r.view(sl), 8, 16)
     wb.run_checks(ctx, sl)
+    C.flush_lookups(ctx)
     ctx.finalize()
 
 
@@ -89,6 +123,74 @@ def test_int_matmul_tampered_out_rejected(rng, params):
     vctx = C.VerifierCtx(Transcript("blk"), params, pctx.tape)
     with pytest.raises(C.ProofError):
         _mini_circuit(vctx, None, None, None, None, n, k, m, False)
+
+
+def _lut_circuit(ctx, idx, out, n, witness):
+    wb = C.WitnessBuilder("aux")
+    i_r = wb.alloc_ranged("idx", n, 16, idx if witness else None)
+    o_l = wb.alloc_limbs("out", n, out if witness else None)
+    sl = wb.build(ctx)
+    C.g_lut(ctx, "rsqrt", i_r.view(sl), o_l.view(sl),
+            idx if witness else None, out if witness else None, n)
+    wb.run_checks(ctx, sl)
+    C.flush_lookups(ctx)
+    ctx.finalize()
+
+
+def test_lut_circuit_roundtrip(rng, params):
+    T = luts.table_q("rsqrt").astype(np.int64)
+    idx = rng.integers(0, 1 << 16, 32)
+    out = T[idx]
+    pctx = C.ProverCtx(Transcript("lut"), params)
+    _lut_circuit(pctx, idx, out, 32, True)
+    # sparse multiplicities ride the tape as uint32 (31-bit codec packing)
+    msp = [o for o in pctx.tape
+           if o[0] == "obj" and isinstance(o[1], tuple) and o[1][0] == "msp"]
+    assert msp and msp[0][1][1].dtype == np.uint32 \
+        and msp[0][1][2].dtype == np.uint32
+    vctx = C.VerifierCtx(Transcript("lut"), params, pctx.tape)
+    _lut_circuit(vctx, None, None, 32, False)
+
+
+def test_lut_bad_pair_rejected(rng, params):
+    T = luts.table_q("rsqrt").astype(np.int64)
+    idx = rng.integers(0, 1 << 16, 32)
+    out = T[idx].copy()
+    out[3] += 1                         # not a table pair any more
+    orig = C._Ctx.check_eq
+    C._Ctx.check_eq = lambda self, a, b, w: None   # malicious prover
+    try:
+        pctx = C.ProverCtx(Transcript("lut"), params)
+        _lut_circuit(pctx, idx, out, 32, True)
+    finally:
+        C._Ctx.check_eq = orig
+    vctx = C.VerifierCtx(Transcript("lut"), params, pctx.tape)
+    with pytest.raises(C.ProofError):
+        _lut_circuit(vctx, None, None, 32, False)
+
+
+def test_tampered_multiplicities_rejected(rng, params):
+    """Counts travel in the clear — a forged count must fail the LogUp
+    identity (or the validator), never pass."""
+    T = luts.table_q("rsqrt").astype(np.int64)
+    idx = rng.integers(0, 1 << 16, 32)
+    out = T[idx]
+    pctx = C.ProverCtx(Transcript("lut"), params)
+    _lut_circuit(pctx, idx, out, 32, True)
+    tape = list(pctx.tape)
+    for i, item in enumerate(tape):
+        if item[0] == "obj" and isinstance(item[1], tuple) \
+                and item[1][0] == "msp":
+            _, support, counts = item[1]
+            bad = counts.copy()
+            bad[0] += 1                       # inflate one multiplicity
+            tape[i] = ("obj", ("msp", support, bad))
+            break
+    else:
+        pytest.fail("no sparse multiplicity object on the tape")
+    vctx = C.VerifierCtx(Transcript("lut"), params, tape)
+    with pytest.raises(C.ProofError):
+        _lut_circuit(vctx, None, None, 32, False)
 
 
 def test_out_of_range_witness_rejected(rng, params):

@@ -1,0 +1,289 @@
+"""Adversarial soundness suite for cross-layer batched PCS openings.
+
+The v2 wire container regroups every opened column of a layer proof into
+per-root deduplicated Merkle multiproofs (shared authentication-path
+prefixes ship exactly once).  That dedup table is attacker-controlled
+bytes, so this suite attacks it directly:
+
+* path-prefix (node-table) swap between two layers' multiproofs,
+* column splice from a SECOND honest attestation (same model, other query),
+* truncated final chunk of the framed stream,
+* a duplicated-node table pointing two paths at one forged node,
+
+each of which must come back as a reasoned ``VerifyReport`` rejection —
+never a crash, never a pass.  Unit tests pin the multiproof /
+``ColumnStore`` primitives underneath.
+"""
+import dataclasses
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro import api
+from repro.core import blocks as B
+from repro.core import field as F
+from repro.core import merkle as M
+from repro.core import pcs as PCS
+from repro.core.transcript import Transcript
+
+CFG = B.BlockCfg(family="gpt2", d=16, dff=32, heads=2, kv_heads=2, dh=8,
+                 seq=8)
+L = 2
+QUERIES = 2
+
+
+# ---------------------------------------------------------------------------
+# Multiproof primitives (no proving — fast).
+# ---------------------------------------------------------------------------
+def _tree(rng, n=16, leaf_len=8):
+    leaves = jnp.asarray(
+        rng.integers(0, F.P, (n, leaf_len)).astype(np.uint32))
+    return M.commit(leaves), leaves
+
+
+def test_multiproof_roundtrip(rng):
+    tree, leaves = _tree(rng)
+    for idxs in ([0], [3, 7], [0, 1, 2, 3], [5, 13, 14], list(range(16))):
+        mp = M.build_multiproof(tree, leaves, idxs)
+        assert M.verify_multiproof(np.asarray(tree.root), mp)
+
+
+def test_multiproof_dedups_shared_prefixes(rng):
+    """{4,5,6,7} is a complete subtree: all sibling prefixes are derived
+    from the leaf set itself, so only 2 upper nodes ship (vs 16 for four
+    independent depth-4 paths)."""
+    tree, leaves = _tree(rng)
+    mp = M.build_multiproof(tree, leaves, [4, 5, 6, 7])
+    assert mp.nodes.shape[0] == 2
+    assert M.verify_multiproof(np.asarray(tree.root), mp)
+
+
+def test_multiproof_from_paths_matches_build(rng):
+    tree, leaves = _tree(rng)
+    idxs = [2, 3, 9]
+    built = M.build_multiproof(tree, leaves, idxs)
+    paths = [M.open_path(tree, i) for i in idxs]
+    leaf_rows = np.stack([np.asarray(leaves[i]) for i in idxs])
+    merged = M.multiproof_from_paths(idxs, leaf_rows, paths, 4)
+    np.testing.assert_array_equal(built.indices, merged.indices)
+    np.testing.assert_array_equal(built.leaves, merged.leaves)
+    np.testing.assert_array_equal(built.nodes, merged.nodes)
+    assert built.depth == merged.depth
+
+
+def test_multiproof_tampered_leaf_rejected(rng):
+    tree, leaves = _tree(rng)
+    mp = M.build_multiproof(tree, leaves, [3, 7])
+    bad_leaves = mp.leaves.copy()
+    bad_leaves[0, 0] ^= 1
+    bad = dataclasses.replace(mp, leaves=bad_leaves)
+    assert not M.verify_multiproof(np.asarray(tree.root), bad)
+
+
+def test_multiproof_duplicated_node_rejected(rng):
+    """A node table with extra rows (two paths steered at one forged
+    node) must fail the strict everything-consumed check; substituting
+    one needed node with a copy of another breaks the root."""
+    tree, leaves = _tree(rng)
+    mp = M.build_multiproof(tree, leaves, [3, 7])
+    root = np.asarray(tree.root)
+    dup = dataclasses.replace(
+        mp, nodes=np.vstack([mp.nodes, mp.nodes[:1]]))
+    assert not M.verify_multiproof(root, dup)
+    assert mp.nodes.shape[0] >= 2
+    forged = mp.nodes.copy()
+    forged[0] = forged[1]
+    assert not M.verify_multiproof(
+        root, dataclasses.replace(mp, nodes=forged))
+
+
+def test_multiproof_hostile_shapes_rejected(rng):
+    tree, leaves = _tree(rng)
+    mp = M.build_multiproof(tree, leaves, [3, 7])
+    root = np.asarray(tree.root)
+    unsorted = dataclasses.replace(mp, indices=mp.indices[::-1].copy())
+    assert not M.verify_multiproof(root, unsorted)
+    dup_idx = dataclasses.replace(
+        mp, indices=np.array([3, 3]), leaves=mp.leaves[[0, 0]])
+    assert not M.verify_multiproof(root, dup_idx)
+    deep = dataclasses.replace(mp, depth=64)
+    assert not M.verify_multiproof(root, deep)
+    out_of_range = dataclasses.replace(mp, indices=np.array([3, 99]))
+    assert not M.verify_multiproof(root, out_of_range)
+    assert not M.verify_multiproof(root, "not a multiproof")
+
+
+def test_batched_openings_roundtrip_and_store(rng, params):
+    """k>=2 claims against one commitment take the batched path; the
+    store-mode verifier accepts out-of-band columns and refuses inline
+    ones (no unchecked second path into verification)."""
+    v = F.f_from_int(rng.integers(0, F.P, 256))
+    com = PCS.commit(v, params)
+    m = com.log_r + com.log_c
+    pts = [jnp.asarray(F.f4_from_base(F.f_from_int(
+        rng.integers(0, F.P, m)))) for _ in range(3)]
+    vals = [PCS.eval_at(com, p) for p in pts]
+    bundle = PCS.prove_openings(com, pts, Transcript("o"), params)
+    assert bundle.batch_sc is not None and bundle.u_prox is None
+    assert PCS.verify_openings(com.root, com.log_r, com.log_c, pts, vals,
+                               bundle, Transcript("o"), params)
+    # tampered reduced row -> rejection
+    bad_us = np.asarray(bundle.us).copy()
+    bad_us[0, 0, 0] ^= 1
+    assert not PCS.verify_openings(
+        com.root, com.log_r, com.log_c, pts, vals,
+        dataclasses.replace(bundle, us=bad_us), Transcript("o"), params)
+    # store mode: columns travel out of band via a verified multiproof
+    idxs = [p.index for p in bundle.paths]
+    depth = bundle.paths[0].siblings.shape[0]
+    mp = M.multiproof_from_paths(idxs, bundle.columns, bundle.paths, depth)
+    assert M.verify_multiproof(com.root, mp)
+    store = PCS.ColumnStore()
+    store.add_root(com.root, mp.indices, mp.leaves)
+    stripped = dataclasses.replace(bundle, columns=None, paths=None)
+    assert PCS.verify_openings(com.root, com.log_r, com.log_c, pts, vals,
+                               stripped, Transcript("o"), params,
+                               store=store)
+    # inline columns while a store is active = smuggling attempt
+    assert not PCS.verify_openings(com.root, com.log_r, com.log_c, pts,
+                                   vals, bundle, Transcript("o"), params,
+                                   store=store)
+    # store missing a queried column -> rejection, not a crash
+    empty = PCS.ColumnStore()
+    assert not PCS.verify_openings(com.root, com.log_r, com.log_c, pts,
+                                   vals, stripped, Transcript("o"),
+                                   params, store=empty)
+
+
+# ---------------------------------------------------------------------------
+# Attestation-level attacks (one service, two honest attestations).
+# ---------------------------------------------------------------------------
+@pytest.fixture(scope="module")
+def svc():
+    srng = np.random.default_rng(11)
+    weights = [B.init_weights(CFG, srng) for _ in range(L)]
+    with api.ProofService([CFG] * L, weights, default_queries=QUERIES,
+                          workers=2, name="adv-model") as s:
+        yield s
+
+
+@pytest.fixture(scope="module")
+def policy():
+    return api.VerifyPolicy(pcs_queries=QUERIES)
+
+
+def _query(seed):
+    qrng = np.random.default_rng(seed)
+    return np.clip(np.round(qrng.normal(0, 0.5, (CFG.d_pad, CFG.seq)) * 256),
+                   -32768, 32767).astype(np.int64)
+
+
+@pytest.fixture(scope="module")
+def query_a():
+    return _query(21)
+
+
+@pytest.fixture(scope="module")
+def wire_a(svc, query_a, policy):
+    return svc.attest(query_a, policy).to_bytes(2)
+
+
+@pytest.fixture(scope="module")
+def wire_b(svc, policy):
+    return svc.attest(_query(22), policy).to_bytes(2)
+
+
+@pytest.fixture(scope="module")
+def card_bytes(svc):
+    return svc.model_card.to_bytes()
+
+
+def _mutate_stores(wire, fn):
+    """Decode a v2 attestation, rewrite its per-layer multiproof stores
+    with ``fn(stores)``, re-encode.  Frame digests are recomputed over
+    the mutated body, so only the PROOF system can reject the result —
+    these are forgery attempts, not transport corruption."""
+    att = api.Attestation.from_bytes(wire)
+    stores = [list(st) for st in att.layer_stores()]
+    att.__dict__["_layer_stores"] = fn(stores)
+    att.__dict__.pop("_stripped_cache", None)
+    att.__dict__["_wire_cache"] = {}
+    return att.to_bytes(2)
+
+
+def test_honest_baseline_accepts(wire_a, query_a, card_bytes, policy):
+    rep = api.verify(wire_a, query_a, card_bytes, policy=policy)
+    assert rep.ok, rep.reason
+    assert rep.checked_layers == L
+
+
+def test_path_prefix_swap_between_layers_rejected(wire_a, query_a,
+                                                  card_bytes, policy):
+    """Swap the deduplicated node tables (the shared path prefixes)
+    between layer 0's and layer 1's first multiproof."""
+    def swap(stores):
+        (r0, m0), (r1, m1) = stores[0][0], stores[1][0]
+        stores[0][0] = (r0, dataclasses.replace(m0, nodes=m1.nodes))
+        stores[1][0] = (r1, dataclasses.replace(m1, nodes=m0.nodes))
+        return stores
+    bad = _mutate_stores(wire_a, swap)
+    rep = api.verify(bad, query_a, card_bytes, policy=policy)
+    assert not rep.ok
+    assert "multiproof rejected" in rep.reason or "layer" in rep.reason
+
+
+def test_column_splice_from_second_attestation_rejected(
+        wire_a, wire_b, query_a, card_bytes, policy):
+    """Splice layer 0's opened columns from a SECOND honest attestation
+    over the same model (different query): every multiproof remains
+    individually valid against a real root, but the Fiat-Shamir-bound
+    query positions no longer match."""
+    stores_b = api.Attestation.from_bytes(wire_b).layer_stores()
+
+    def splice(stores):
+        stores[0] = [tuple(e) for e in stores_b[0]]
+        return stores
+    bad = _mutate_stores(wire_a, splice)
+    rep = api.verify(bad, query_a, card_bytes, policy=policy)
+    assert not rep.ok
+    assert "layer 0" in rep.reason or "multiproof" in rep.reason
+
+
+def test_truncated_final_chunk_rejected(wire_a, query_a, card_bytes,
+                                        policy):
+    sv = api.StreamingVerifier(query_a, card_bytes, policy=policy)
+    sv.feed(wire_a[:len(wire_a) - 21])
+    rep = sv.finish()
+    assert not rep.ok and rep.complete
+    assert "truncat" in rep.reason or "stream" in rep.reason
+
+
+def test_duplicated_node_table_rejected(wire_a, query_a, card_bytes,
+                                        policy):
+    """Pad layer 0's first multiproof with a duplicate node row — the
+    strict canonical-consumption check rejects it (reasoned report, not
+    a crash)."""
+    def dup(stores):
+        r0, m0 = stores[0][0]
+        stores[0][0] = (r0, dataclasses.replace(
+            m0, nodes=np.vstack([np.asarray(m0.nodes),
+                                 np.asarray(m0.nodes)[:1]])))
+        return stores
+    bad = _mutate_stores(wire_a, dup)
+    rep = api.verify(bad, query_a, card_bytes, policy=policy)
+    assert not rep.ok
+    assert "multiproof rejected" in rep.reason or "layer" in rep.reason
+
+
+def test_cross_layer_store_swap_rejected(wire_a, query_a, card_bytes,
+                                         policy):
+    """Hand layer 0 the ENTIRE store list of layer 1 (all individually
+    valid multiproofs): layer 0's openings no longer resolve."""
+    def swap_all(stores):
+        stores[0], stores[1] = stores[1], stores[0]
+        return stores
+    bad = _mutate_stores(wire_a, swap_all)
+    rep = api.verify(bad, query_a, card_bytes, policy=policy)
+    assert not rep.ok
+    assert "layer" in rep.reason
