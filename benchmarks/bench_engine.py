@@ -35,6 +35,7 @@ def run(ci: bool = True, layers: int = 4, workers: int = None,
     from repro.core import blocks as B
     from repro.core import chain as CH
     from repro.core import pcs as PCS
+    from repro.kernels import ops as KOPS
     from repro.runtime.engine import ProverEngine, WeightCommitCache
 
     d, heads = (16, 2) if ci else (32, 4)
@@ -97,6 +98,41 @@ def run(ci: bool = True, layers: int = 4, workers: int = None,
         for p in proofs.values()
         for i, a in enumerate(proofs["sequential"].layer_proofs))
 
+    # -- kernel-path comparison: the SAME in-process sequential prove, ref
+    # (pure-jnp oracle) vs fused (Pallas kernel path), warm in both cases.
+    # Transcript equality across paths is asserted — the fused path is
+    # only admissible because it is byte-identical to the oracle.
+    kernel_results = {}
+    ambient = os.environ.get("NANOZK_KERNEL_PATH")
+    try:
+        for path in ("ref", "fused"):
+            os.environ["NANOZK_KERNEL_PATH"] = path
+            eng = ProverEngine(cfgs, weights, params, weight_cache=cache,
+                               workers=1)
+            eng.prove(x0)                 # untimed: per-path jit warmup
+            t0 = time.time()
+            proof, report = eng.prove(x0)
+            wall = time.time() - t0
+            kernel_results[path] = {
+                "wall_seconds": wall,
+                "prove_seconds": report.prove_seconds,
+                "proofs_per_sec": layers / report.prove_seconds,
+                "identical_to_ref_transcripts":
+                    pickle.dumps([lp.tape for lp in proof.layer_proofs])
+                    == pickle.dumps([lp.tape for lp in
+                                     proofs["sequential"].layer_proofs]),
+            }
+            print(f"kernel path {path}: {wall:.1f}s wall, "
+                  f"{layers / report.prove_seconds:.3f} layer proofs/sec "
+                  f"(transcripts identical: "
+                  f"{kernel_results[path]['identical_to_ref_transcripts']})",
+                  flush=True)
+    finally:
+        if ambient is None:
+            os.environ.pop("NANOZK_KERNEL_PATH", None)
+        else:
+            os.environ["NANOZK_KERNEL_PATH"] = ambient
+
     # -- warm-service scenario: N queries through ONE resident ProofService
     # (the persistent serving daemon: engine + process fleet + weight cache
     # stay resident, so query 1 pays spawn/jit/setup and the rest don't).
@@ -158,8 +194,10 @@ def run(ci: bool = True, layers: int = 4, workers: int = None,
     report = {
         "config": {"layers": layers, "d": d, "heads": heads, "seq": 8,
                    "pcs_queries": queries, "ci": ci,
-                   "cpu_cores": os.cpu_count()},
+                   "cpu_cores": os.cpu_count(),
+                   "kernel_path": KOPS.kernel_path()},
         "setup_warmup_seconds": t_setup,
+        "kernel_paths": kernel_results,
         "sequential": results["sequential"],
         "parallel_threads": results["parallel_threads"],
         "sequential_fleet": results["sequential_fleet"],

@@ -1,0 +1,90 @@
+"""CI prover-throughput regression gate.
+
+Compares the layer-proofs/sec just measured by
+``benchmarks/bench_engine.py --ci`` (BENCH_engine.json) against the
+committed baseline (``benchmarks/speed_baseline.json``) and exits
+nonzero if throughput dropped by more than the allowed fraction
+(default 15%).  Getting faster is always fine — run with ``--update``
+after an intentional speedup to ratchet the baseline up.
+
+Gated metrics: the in-process sequential scenario, and the per-kernel-path
+("ref" / "fused") side-by-side measurements when the benchmark recorded
+them.  Wall-clock on shared CI hosts is noisy; 15% headroom plus the warm
+(post-jit) measurement discipline of bench_engine keeps this gate stable.
+
+    PYTHONPATH=src python benchmarks/check_speed_baseline.py [--update]
+"""
+import argparse
+import json
+import os
+import sys
+
+ROOT = os.path.join(os.path.dirname(__file__), "..")
+BASELINE = os.path.join(os.path.dirname(__file__), "speed_baseline.json")
+
+
+def _metrics(bench):
+    out = {"sequential_proofs_per_sec":
+           bench["sequential"]["proofs_per_sec"]}
+    for path, rec in bench.get("kernel_paths", {}).items():
+        out[f"{path}_proofs_per_sec"] = rec["proofs_per_sec"]
+    return out
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--bench", default=os.path.join(ROOT,
+                                                    "BENCH_engine.json"))
+    ap.add_argument("--baseline", default=BASELINE)
+    ap.add_argument("--tolerance", type=float, default=0.15,
+                    help="max allowed fractional slowdown (default 0.15)")
+    ap.add_argument("--update", action="store_true",
+                    help="rewrite the baseline from the current benchmark")
+    args = ap.parse_args()
+
+    with open(args.bench) as f:
+        bench = json.load(f)
+    current = _metrics(bench)
+    cfg = bench.get("config", {})
+    current["config"] = {k: cfg.get(k) for k in
+                         ("layers", "d", "heads", "seq", "pcs_queries")}
+
+    if args.update or not os.path.exists(args.baseline):
+        with open(args.baseline, "w") as f:
+            json.dump(current, f, indent=1)
+            f.write("\n")
+        print(f"baseline written: {args.baseline} "
+              f"({current['sequential_proofs_per_sec']:.3f} proofs/sec "
+              "sequential)")
+        return 0
+
+    with open(args.baseline) as f:
+        base = json.load(f)
+    if base.get("config") != current["config"]:
+        print(f"speed gate: config changed {base.get('config')} -> "
+              f"{current['config']}; re-baseline with --update")
+        return 1
+
+    failed = False
+    for key, base_val in base.items():
+        if key == "config":
+            continue
+        if key not in current:
+            print(f"speed gate [{key}]: missing from benchmark output FAIL")
+            failed = True
+            continue
+        allowed = base_val * (1.0 - args.tolerance)
+        status = "OK" if current[key] >= allowed else "FAIL"
+        failed |= status == "FAIL"
+        print(f"speed gate [{key}]: current {current[key]:.3f} proofs/sec, "
+              f"baseline {base_val:.3f} (allowed >= {allowed:.3f}) "
+              f"{status}")
+    if failed:
+        print("prover throughput regressed more than "
+              f"{args.tolerance:.0%} below the committed baseline")
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -26,6 +26,7 @@ finalize().
 from __future__ import annotations
 
 import dataclasses
+import functools
 from collections import OrderedDict
 from typing import Dict, List, Optional, Sequence, Tuple, Union
 
@@ -42,6 +43,17 @@ from .mle import (eq_eval, eq_points, fsum, mle_eval_base, mle_eval_f4,
 from .transcript import Transcript
 
 INV2 = (F.P + 1) // 2    # field inverse of 2 as a canonical int
+
+
+@functools.lru_cache(maxsize=None)
+def _const_bits_point(idx: int, npfx: int) -> np.ndarray:
+    """(npfx, 4) Fp4 point whose rows are the bits of idx, MSB first."""
+    out = np.zeros((npfx, 4), np.uint32)
+    for j in range(npfx):
+        if (idx >> (npfx - 1 - j)) & 1:
+            out[j, 0] = F.R_MOD_P
+    out.setflags(write=False)
+    return out
 
 
 class ProofError(Exception):
@@ -172,11 +184,10 @@ class _Ctx:
         """Full-commitment point for a slice claim: const prefix ++ point."""
         log_total = sum(self.shapes[sl.com])
         npfx = log_total - sl.log_n
-        idx = sl.offset >> sl.log_n
-        bits = [(idx >> (npfx - 1 - j)) & 1 for j in range(npfx)]
-        pfx = jnp.stack([F.f4_from_base(F.fconst(b)) for b in bits]) \
-            if npfx else jnp.zeros((0, 4), jnp.uint32)
-        return jnp.concatenate([pfx, point]) if npfx else point
+        if not npfx:
+            return point
+        pfx = _const_bits_point(sl.offset >> sl.log_n, npfx)
+        return jnp.concatenate([jnp.asarray(pfx), jnp.asarray(point)])
 
     # -- view claims ---------------------------------------------------------
     def claim(self, v: View, point: jnp.ndarray) -> jnp.ndarray:
@@ -184,11 +195,10 @@ class _Ctx:
         if isinstance(v, Slice):
             return self._leaf_claim(v.com, self._prefix_point(v, point))
         if isinstance(v, Affine):
-            acc = F.f4_from_base(F.fconst(v.const))
+            acc = _fc(v.const)
             for c, sub in v.terms:
                 sval = self.claim(sub, point)
-                acc = F.f4add(acc, F.f4mul(F.f4_from_base(F.fconst(c)),
-                                           sval))
+                acc = F.f4add(acc, F.f4mul(_fc(c), sval))
             return acc
         if isinstance(v, BcastCols):
             base_n = view_log_n(v.base)
@@ -258,7 +268,9 @@ class ProverCtx(_Ctx):
         self.tr.absorb(jnp.asarray(com.root))
 
     def _leaf_claim_impl(self, com: str, point: jnp.ndarray) -> jnp.ndarray:
-        val = PCS.eval_at(self.coms[com], point)
+        # sliced evaluation: a const-prefixed (slice) point only pays for
+        # its slice — bit-identical value, see pcs.eval_at_sliced
+        val = PCS.eval_at_sliced(self.coms[com], np.asarray(point))
         self.tape.append(("val", np.asarray(val)))
         return val
 
@@ -299,8 +311,9 @@ class ProverCtx(_Ctx):
         assert not self.lookups, "finalize with pending lookups — call flush_lookups first"
         for name in self.claims:
             points = [jnp.asarray(p) for p, _ in self.claims[name]]
+            values = [v for _, v in self.claims[name]]
             bundle = PCS.prove_openings(self.coms[name], points, self.tr,
-                                        self.params)
+                                        self.params, values=values)
             self.tape.append(("open", name, bundle))
         return self.tape
 
@@ -386,11 +399,13 @@ Ctx = Union[ProverCtx, VerifierCtx]
 # ---------------------------------------------------------------------------
 # Gadgets. Each runs identically on both sides; prover writes tape values.
 # ---------------------------------------------------------------------------
-def _half_point(m: int) -> jnp.ndarray:
-    """The point (1/2, ..., 1/2) in Fp4 — see g_sum."""
-    if m == 0:
-        return jnp.zeros((0, 4), jnp.uint32)
-    return jnp.broadcast_to(_fc(INV2), (m, 4))
+@functools.lru_cache(maxsize=None)
+def _half_point(m: int) -> np.ndarray:
+    """The point (1/2, ..., 1/2) in Fp4 — see g_sum. Cached per arity."""
+    out = np.zeros((m, 4), np.uint32)
+    out[:, 0] = INV2 * F._R % F.P
+    out.setflags(write=False)
+    return out
 
 
 def g_sum(ctx: Ctx, v: View) -> jnp.ndarray:
@@ -500,8 +515,19 @@ def g_colsum(ctx: Ctx, X: View, shape: Tuple[int, int],
     return F.f4mul(_fc(n % F.P), ctx.claim(X, pt))
 
 
-def _fc(c: int) -> jnp.ndarray:
-    return F.f4_from_base(F.fconst(c))
+@functools.lru_cache(maxsize=4096)
+def _fc_cached(c: int) -> np.ndarray:
+    out = np.zeros(4, np.uint32)
+    out[0] = c * F._R % F.P
+    out.setflags(write=False)
+    return out
+
+
+def _fc(c: int):
+    """Fp4 constant for Python int c (numpy, Montgomery — cached: the
+    gadget glue asks for the same small constants thousands of times per
+    layer, and an eager jnp materialization costs ~0.3 ms each)."""
+    return _fc_cached(c % F.P)
 
 
 def f4_lincomb(pairs, const: int = 0) -> jnp.ndarray:

@@ -17,6 +17,8 @@ Conventions
 """
 from __future__ import annotations
 
+import functools
+
 import numpy as np
 import jax
 import jax.numpy as jnp
@@ -154,9 +156,21 @@ def fzero(shape=()) -> jnp.ndarray:
     return jnp.zeros(shape, dtype=_U32)
 
 
+@functools.lru_cache(maxsize=4096)
+def _fconst_cached(v: int, shape: tuple) -> np.ndarray:
+    # numpy, not jnp: safe to cache across jit traces (a jnp.full inside a
+    # trace is a tracer and must never be memoized), and jax treats the
+    # cached array as a constant either way.
+    return np.full(shape, _c(v * _R % P), dtype=np.uint32)
+
+
 def fconst(v: int, shape=()) -> jnp.ndarray:
-    """Montgomery constant for Python int v."""
-    return jnp.full(shape, _c((v % P) * _R % P), dtype=_U32)
+    """Montgomery constant for Python int v (cached per shape: un-jitted
+    jnp.full costs ~0.3 ms of dispatch and the prover asks for the same
+    small constants thousands of times per layer)."""
+    if isinstance(shape, int):
+        shape = (shape,)
+    return _fconst_cached(v % P, tuple(shape))
 
 
 # ---------------------------------------------------------------------------
@@ -165,6 +179,7 @@ def fconst(v: int, shape=()) -> jnp.ndarray:
 _W4M = _c((W4 * _R) % P)  # W4 in Montgomery form
 
 
+@jax.jit
 def f4_from_base(a: jnp.ndarray) -> jnp.ndarray:
     """Embed Fp -> Fp4 (constant coefficient)."""
     z = jnp.zeros(jnp.shape(a) + (3,), dtype=_U32)

@@ -24,6 +24,8 @@ from . import sumcheck as SC
 from .mle import mle_eval_base, partial_eval_cols, partial_eval_rows
 from .transcript import Transcript
 
+from repro.kernels import ops as KOPS
+
 
 @dataclasses.dataclass
 class EvalClaim:
@@ -58,8 +60,14 @@ def prove(a_name: str, A: jnp.ndarray, b_name: str, B: jnp.ndarray,
     c_claim = mle_eval_base(C.reshape(-1), c_point)
     transcript.absorb(c_claim)
 
-    A_r = partial_eval_rows(A, r_i)              # (k, 4)
-    B_c = partial_eval_cols(B, r_j)              # (k, 4)
+    if KOPS.use_fused():
+        # modmatmul-kernel materialization: eq^T A / B eq are exact mod-p
+        # matmuls, value-identical to the mle halving-tree reference.
+        A_r = KOPS.partial_eval_rows_mm(A, r_i)  # (k, 4)
+        B_c = KOPS.partial_eval_cols_mm(B, r_j)  # (k, 4)
+    else:
+        A_r = partial_eval_rows(A, r_i)          # (k, 4)
+        B_c = partial_eval_cols(B, r_j)          # (k, 4)
     proof, rho = SC.prove([A_r, B_c], transcript)
 
     claims = [

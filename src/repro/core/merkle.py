@@ -15,6 +15,23 @@ import jax.numpy as jnp
 from . import field as F
 from . import poseidon2 as P2
 
+from repro.kernels import ops as KOPS
+
+
+def _hash_leaves(leaves: jnp.ndarray) -> jnp.ndarray:
+    """Leaf sponge pass, kernel-batched on the fused path (bit-identical to
+    P2.hash_elems — same length tag, chunk schedule and permutation)."""
+    if KOPS.use_fused():
+        return KOPS.poseidon2_hash(leaves)
+    return P2.hash_elems(leaves)
+
+
+def _compress_level(left: jnp.ndarray, right: jnp.ndarray) -> jnp.ndarray:
+    """2-to-1 level compression, kernel-batched on the fused path."""
+    if KOPS.use_fused():
+        return KOPS.poseidon2_compress(left, right)
+    return P2.compress(left, right)
+
 
 @dataclasses.dataclass
 class MerkleTree:
@@ -32,7 +49,7 @@ class MerkleTree:
 def commit(leaves: jnp.ndarray) -> MerkleTree:
     """leaves: (n, leaf_len) field elements; n padded to a power of two."""
     n = leaves.shape[0]
-    digests = P2.hash_elems(leaves)
+    digests = _hash_leaves(leaves)
     n_pad = 1 << max((n - 1).bit_length(), 0) if n > 1 else 1
     if n_pad != n:
         digests = jnp.concatenate(
@@ -40,7 +57,7 @@ def commit(leaves: jnp.ndarray) -> MerkleTree:
     levels = [digests]
     while levels[-1].shape[0] > 1:
         cur = levels[-1]
-        levels.append(P2.compress(cur[0::2], cur[1::2]))
+        levels.append(_compress_level(cur[0::2], cur[1::2]))
     return MerkleTree(levels=levels)
 
 
@@ -54,7 +71,7 @@ def commit_batch(leaves: jnp.ndarray) -> List[MerkleTree]:
     bit-identical to ``commit(leaves[i])``.
     """
     b, n = leaves.shape[0], leaves.shape[1]
-    digests = P2.hash_elems(leaves)                       # (B, n, DIGEST)
+    digests = _hash_leaves(leaves)                        # (B, n, DIGEST)
     n_pad = 1 << max((n - 1).bit_length(), 0) if n > 1 else 1
     if n_pad != n:
         digests = jnp.concatenate(
@@ -63,7 +80,7 @@ def commit_batch(leaves: jnp.ndarray) -> List[MerkleTree]:
     levels = [digests]
     while levels[-1].shape[1] > 1:
         cur = levels[-1]
-        levels.append(P2.compress(cur[:, 0::2], cur[:, 1::2]))
+        levels.append(_compress_level(cur[:, 0::2], cur[:, 1::2]))
     return [MerkleTree(levels=[lv[i] for lv in levels]) for i in range(b)]
 
 

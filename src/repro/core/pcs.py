@@ -37,18 +37,23 @@ soundness of the batching. All arithmetic is uint32 Montgomery (field.py).
 from __future__ import annotations
 
 import dataclasses
+import functools
 import math
 from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
+import jax
 import jax.numpy as jnp
 
 from . import field as F
 from . import merkle as M
 from . import ntt as N
 from . import sumcheck as SC
-from .mle import eq_eval, eq_points, fsum, partial_eval_rows
+from . import transcript as T
+from .mle import eq_eval, eq_points, fsum, mle_eval_base, partial_eval_rows
 from .transcript import Transcript
+
+from repro.kernels import ops as KOPS
 
 
 @dataclasses.dataclass(frozen=True)
@@ -137,6 +142,25 @@ def shape_for(n_elems: int, aspect: int = 0) -> Tuple[int, int]:
     return log_r, log_c
 
 
+def _rs_encode(rows: jnp.ndarray, blowup: int) -> jnp.ndarray:
+    """RS-encode rows, routed through the NTT kernel on the fused path.
+
+    The kernel runs the identical butterfly schedule over the identical
+    twiddles, so codewords are bit-identical either way (ntt.py is the
+    oracle).  Routing lives here rather than in ntt.py to keep core/ntt
+    free of a kernels import cycle."""
+    c = rows.shape[-1]
+    n = c * blowup
+    if KOPS.use_fused() and n > 1:
+        padded = jnp.concatenate(
+            [rows, jnp.zeros(rows.shape[:-1] + (n - c,), dtype=rows.dtype)],
+            axis=-1)
+        flat = padded.reshape(-1, n)
+        out = KOPS.ntt(flat, block=math.gcd(flat.shape[0], 8))
+        return out.reshape(rows.shape[:-1] + (n,))
+    return N.rs_encode(rows, blowup)
+
+
 def commit(vec: jnp.ndarray, params: PCSParams, aspect: int = 0) -> Commitment:
     """vec: flat base-field (Montgomery uint32) array; zero-padded to 2^m."""
     n = vec.shape[0]
@@ -145,7 +169,7 @@ def commit(vec: jnp.ndarray, params: PCSParams, aspect: int = 0) -> Commitment:
     if total != n:
         vec = jnp.concatenate([vec, jnp.zeros((total - n,), jnp.uint32)])
     mat = vec.reshape(1 << log_r, 1 << log_c)
-    enc = N.rs_encode(mat, params.blowup)
+    enc = _rs_encode(mat, params.blowup)
     tree = M.commit(enc.T)                      # leaves are columns
     return Commitment(mat=mat, enc=enc, tree=tree, log_r=log_r, log_c=log_c)
 
@@ -170,10 +194,18 @@ def commit_batch(vecs: Sequence[jnp.ndarray], params: PCSParams
         (jnp.concatenate([v, jnp.zeros((total - n,), jnp.uint32)])
          if total != n else v).reshape(1 << log_r, 1 << log_c)
         for v in vecs])                                  # (B, R, C)
-    enc = N.rs_encode(mats, params.blowup)               # (B, R, C*blowup)
+    enc = _rs_encode(mats, params.blowup)                # (B, R, C*blowup)
     trees = M.commit_batch(jnp.swapaxes(enc, 1, 2))      # leaves are columns
     return [Commitment(mat=mats[i], enc=enc[i], tree=trees[i],
                        log_r=log_r, log_c=log_c) for i in range(len(vecs))]
+
+
+@functools.partial(jax.jit, static_argnames=("log_r",))
+def _eval_at_impl(mat: jnp.ndarray, point: jnp.ndarray, log_r: int
+                  ) -> jnp.ndarray:
+    u = partial_eval_rows(mat, point[:log_r])   # (C, 4)
+    a = eq_points(point[log_r:])                # (C, 4)
+    return fsum(F.f4mul(u, a), axis=0)
 
 
 def eval_at(com: Commitment, point: jnp.ndarray) -> jnp.ndarray:
@@ -181,10 +213,139 @@ def eval_at(com: Commitment, point: jnp.ndarray) -> jnp.ndarray:
 
     Global convention (mle.py): point = [row_point, col_point], MSB-first.
     """
-    r_rows, r_cols = point[:com.log_r], point[com.log_r:]
-    u = partial_eval_rows(com.mat, r_rows)      # (C, 4)
-    a = eq_points(r_cols)                       # (C, 4)
-    return fsum(F.f4mul(u, a), axis=0)
+    return _eval_at_impl(com.mat, jnp.asarray(point), com.log_r)
+
+
+@functools.partial(jax.jit, static_argnames=("log_r",))
+def _batched_values_impl(mat: jnp.ndarray, pts: jnp.ndarray, log_r: int
+                         ) -> jnp.ndarray:
+    """eval_at for all k points in one dispatch: pts (k, m, 4) -> (k, 4)."""
+    return jax.vmap(lambda p: _eval_at_impl(mat, p, log_r))(pts)
+
+
+@jax.jit
+def _absorb_values_scan(state: jnp.ndarray, values: jnp.ndarray
+                        ) -> jnp.ndarray:
+    """Absorb k Fp4 values one-by-one (the batched-opening schedule) in a
+    single dispatch.  Each scan step is exactly transcript.absorb(v): the
+    resulting sponge state is byte-identical to the k-call loop."""
+    def step(st, v):
+        return T._absorb_any(st, v, 4), None
+    state, _ = jax.lax.scan(step, state, values)
+    return state
+
+
+def _const_prefix_split(point_np: np.ndarray) -> Tuple[int, int]:
+    """Longest leading run of exact 0/1 rows of a host-side point.
+
+    Returns (s, idx): the first s rows of the point are the bits of idx
+    (MSB first, exact Montgomery constants).  For such a point the MLE
+    factorizes, eq(point, z) = [z_hi == idx] * eq(point[s:], z_lo), so any
+    evaluation/eq-table work collapses from the full 2^m commitment onto
+    the 2^(m-s) slice — and slice claims (circuit._prefix_point) are the
+    overwhelming majority of PCS claims."""
+    s, idx = 0, 0
+    for row in np.asarray(point_np):
+        if row[1] or row[2] or row[3]:
+            break
+        if row[0] == 0:
+            bit = 0
+        elif row[0] == F.R_MOD_P:
+            bit = 1
+        else:
+            break
+        idx = (idx << 1) | bit
+        s += 1
+    return s, idx
+
+
+def eval_at_sliced(com: Commitment, point_np: np.ndarray) -> jnp.ndarray:
+    """``eval_at`` that pays only for the slice a const-prefixed point
+    addresses (bit-identical value: the out-of-slice eq factors are exact
+    zeros, so the full sum collapses to the slice sum)."""
+    point_np = np.asarray(point_np)
+    s, idx = _const_prefix_split(point_np)
+    m = com.log_r + com.log_c
+    if s == 0 or s > m:
+        return eval_at(com, jnp.asarray(point_np))
+    t = m - s
+    flat = com.mat.reshape(-1)
+    return mle_eval_base(
+        jax.lax.dynamic_slice(flat, (idx << t,), (1 << t,)),
+        jnp.asarray(point_np[s:]))
+
+
+@functools.partial(jax.jit, static_argnames=("k",))
+def _gamma_powers(gamma: jnp.ndarray, k: int) -> jnp.ndarray:
+    """(k, 4): gamma^0 .. gamma^(k-1)."""
+    def step(w, _):
+        return F.f4mul(w, gamma), w
+    _, ws = jax.lax.scan(step, F.f4one(()), None, length=k)
+    return ws
+
+
+@functools.partial(jax.jit, static_argnames=("t", "n_tot"))
+def _bucket_e_impl(sufs: jnp.ndarray, ws_ext: jnp.ndarray, widx: jnp.ndarray,
+                   los: jnp.ndarray, t: int, n_tot: int) -> jnp.ndarray:
+    """Scatter one suffix-length bucket of claim groups into a (n_tot, 4)
+    buffer.  sufs: (G, Mx, t, 4) group-member suffixes (zero-padded slots),
+    ws_ext: (k+1, 4) gamma powers with a trailing zero row, widx: (G, Mx)
+    per-slot claim index (padding slots point at the zero row, so they
+    contribute exactly nothing), los: (G,) slice offsets.  Groups within a
+    bucket share t but have distinct prefixes, so their slices are disjoint
+    and the scatter is collision-free."""
+    tabs = jax.vmap(jax.vmap(eq_points))(sufs)           # (G, Mx, 2^t, 4)
+    ws = ws_ext[widx]                                    # (G, Mx, 4)
+    seg = fsum(F.f4mul(ws[:, :, None, :], tabs), axis=1)  # (G, 2^t, 4)
+    rows = (los[:, None] + jnp.arange(1 << t)[None, :]).reshape(-1)
+    e = jnp.zeros((n_tot, 4), jnp.uint32)
+    return e.at[rows].set(seg.reshape(-1, 4), unique_indices=True)
+
+
+def _build_e_vec(n_tot: int, pts_np: Sequence[np.ndarray],
+                 gamma: jnp.ndarray) -> jnp.ndarray:
+    """e_vec = sum_i gamma^i eq(pts[i], .) built slice-wise.
+
+    Claims are grouped by the slice their const-bit prefix addresses, then
+    groups are bucketed by suffix length t: each bucket is ONE jitted
+    vmap-eq + scatter dispatch (distinct prefixes within a bucket address
+    disjoint slices).  Values are identical to the naive sequential fold
+    (exact mod-p arithmetic is reduction-order-free and zero-weight padding
+    slots are exact additive identities), but the work drops from k*N to
+    the sum of the touched slice sizes, in a handful of dispatches."""
+    m = n_tot.bit_length() - 1
+    k = len(pts_np)
+    if k == 0:
+        return jnp.zeros((n_tot, 4), jnp.uint32)
+    ws_ext = jnp.concatenate(
+        [_gamma_powers(gamma, k), jnp.zeros((1, 4), jnp.uint32)])
+    groups: Dict[Tuple[int, int], List[int]] = {}
+    for i, p in enumerate(pts_np):
+        s, idx = _const_prefix_split(p)
+        if s > m:                       # fully-constant point: keep 0 vars
+            idx >>= s - m
+            s = m
+        groups.setdefault((m - s, idx), []).append(i)
+    buckets: Dict[int, List[Tuple[int, List[int]]]] = {}
+    for (t, idx), members in groups.items():
+        buckets.setdefault(t, []).append((idx, members))
+    e_vec = None
+    for t in sorted(buckets):
+        glist = sorted(buckets[t])
+        G = len(glist)
+        mx = max(len(mem) for _, mem in glist)
+        sufs = np.zeros((G, mx, t, 4), np.uint32)
+        widx = np.full((G, mx), k, np.int64)   # padding -> zero weight row
+        los = np.empty((G,), np.int64)
+        for g, (idx, members) in enumerate(glist):
+            los[g] = idx << t
+            for j, i in enumerate(members):
+                sufs[g, j] = pts_np[i][m - t:]
+                widx[g, j] = i
+        part = _bucket_e_impl(jnp.asarray(sufs), ws_ext, jnp.asarray(widx),
+                              jnp.asarray(los), t, n_tot)
+        e_vec = part if e_vec is None else F.f4add(e_vec, part)
+    return e_vec
 
 
 def _encode_f4_row(u: jnp.ndarray, blowup: int) -> jnp.ndarray:
@@ -204,11 +365,18 @@ def _gamma_fold(values: Sequence[jnp.ndarray], gamma: jnp.ndarray
 
 
 def prove_openings(com: Commitment, points: Sequence[jnp.ndarray],
-                   transcript: Transcript, params: PCSParams) -> OpeningBundle:
-    """Open the commitment at each point (batched when >= 2 points)."""
+                   transcript: Transcript, params: PCSParams,
+                   values: Optional[Sequence[np.ndarray]] = None
+                   ) -> OpeningBundle:
+    """Open the commitment at each point (batched when >= 2 points).
+
+    ``values`` optionally carries the already-computed claim values (the
+    circuit layer knows them — it absorbed each at claim time); when given,
+    the batched path skips re-evaluating the MLE at every point."""
     points = [jnp.asarray(p) for p in points]
     if len(points) >= 2:
-        return _prove_openings_batched(com, points, transcript, params)
+        return _prove_openings_batched(com, points, transcript, params,
+                                       values)
     us = []
     for point in points:
         r_rows = point[:com.log_r]
@@ -228,25 +396,33 @@ def prove_openings(com: Commitment, points: Sequence[jnp.ndarray],
 
 
 def _prove_openings_batched(com: Commitment, points: Sequence[jnp.ndarray],
-                            transcript: Transcript, params: PCSParams
+                            transcript: Transcript, params: PCSParams,
+                            values: Optional[Sequence[np.ndarray]] = None
                             ) -> OpeningBundle:
-    """gamma-fold all claims into one sum-check, open once at its point."""
-    values = []
-    for p in points:
-        v = eval_at(com, p)
-        transcript.absorb(v)
-        values.append(v)
+    """gamma-fold all claims into one sum-check, open once at its point.
+
+    The k-claim prologue (k MLE evaluations, k value absorbs, the e_vec
+    build) ran as O(k) eager op chains over the FULL commitment and
+    dominated layer proving (54% of prove_layer).  Now: values arrive
+    precomputed (or one vmapped dispatch), the k absorbs are one scanned
+    dispatch, and e_vec is built slice-wise (_build_e_vec).  All values and
+    sponge states are bit-identical to the naive loop (exact arithmetic)."""
+    pts_np = [np.asarray(p) for p in points]
+    if values is None:
+        pts = jnp.stack([jnp.asarray(p) for p in points])    # (k, m, 4)
+        vals = _batched_values_impl(com.mat, pts, com.log_r)  # (k, 4)
+    else:
+        assert len(values) == len(points)
+        vals = jnp.asarray(np.stack([np.asarray(v) for v in values]))
+    transcript.set_state(_absorb_values_scan(transcript.state, vals))
     gamma = transcript.challenge_f4()
-    n_tot = com.mat.size
     m_lift = F.f4_from_base(com.mat.reshape(-1))             # (N, 4)
-    e_vec = jnp.zeros((n_tot, 4), jnp.uint32)
-    w = F.f4one(())
-    for p in points:
-        term = F.f4mul(jnp.broadcast_to(w, (n_tot, 4)), eq_points(p))
-        e_vec = F.f4add(e_vec, term)
-        w = F.f4mul(w, gamma)
+    e_vec = _build_e_vec(com.mat.size, pts_np, gamma)
     sc, pt = SC.prove([m_lift, e_vec], transcript)
-    u = partial_eval_rows(com.mat, pt[:com.log_r])           # (C, 4)
+    if KOPS.use_fused():
+        u = KOPS.partial_eval_rows_mm(com.mat, pt[:com.log_r])  # (C, 4)
+    else:
+        u = partial_eval_rows(com.mat, pt[:com.log_r])          # (C, 4)
     transcript.absorb(u)
     n_cols = com.enc.shape[1]
     idx = transcript.challenge_indices(n_cols, params.queries)

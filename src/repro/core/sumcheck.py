@@ -23,6 +23,20 @@ from . import field as F
 from .mle import fsum
 from .transcript import Transcript
 
+from repro.kernels import ops as KOPS
+
+# Optional cross-claim round batcher (runtime/engine.py installs one when a
+# thread fleet proves layers concurrently on the fused kernel path).  Worker
+# threads register with it; their sum-check claims are then coalesced into
+# multi-claim kernel launches.  Threads that never registered fall through
+# to the direct path, so a global hook is safe.
+_ROUND_BATCHER = None
+
+
+def set_round_batcher(batcher) -> None:
+    global _ROUND_BATCHER
+    _ROUND_BATCHER = batcher
+
 
 @jax.jit
 def _round_kernel(factors: Tuple[jnp.ndarray, ...]):
@@ -89,6 +103,9 @@ def prove(factors: Sequence[jnp.ndarray], transcript: Transcript
     assert 1 << m == n, "factor length must be a power of two"
     d = len(factors)
 
+    if m and KOPS.use_fused():
+        return _prove_fused(factors, transcript)
+
     challenges: List[jnp.ndarray] = []
     round_polys = []
     factors = tuple(factors)
@@ -109,6 +126,23 @@ def prove(factors: Sequence[jnp.ndarray], transcript: Transcript
     return SumcheckProof(round_polys=np.stack(round_polys) if m else
                          np.zeros((0, d, 4), np.uint32),
                          final_evals=np.asarray(final_evals)), point
+
+
+def _prove_fused(factors: Sequence[jnp.ndarray], transcript: Transcript
+                 ) -> Tuple[SumcheckProof, jnp.ndarray]:
+    """Fused-kernel prover: all m rounds (g evals + absorb + challenge +
+    fold) run as Pallas launches under one jit, transcripts byte-identical
+    to the reference loop above (exact mod-p arithmetic is order-free and
+    the kernel replicates the sponge schedule element-for-element)."""
+    batcher = _ROUND_BATCHER
+    if batcher is not None and batcher.registered():
+        return batcher.prove(tuple(factors), transcript)
+    rp, pts, finals, states = KOPS.sumcheck_prove_rounds(
+        tuple(factors), transcript.state)
+    transcript.set_state(states[0])
+    rp_np, finals_np = jax.device_get((rp, finals))     # one host sync
+    return SumcheckProof(round_polys=np.ascontiguousarray(rp_np[0, :, 1:]),
+                         final_evals=finals_np[0]), pts[0]
 
 
 @jax.jit

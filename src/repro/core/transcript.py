@@ -31,24 +31,53 @@ def _absorb_impl(state: jnp.ndarray, flat: jnp.ndarray, n: int) -> jnp.ndarray:
     return state
 
 
+@functools.partial(jax.jit, static_argnames=("n",))
+def _absorb_any(state: jnp.ndarray, elems: jnp.ndarray, n: int) -> jnp.ndarray:
+    """Ravel/pad inside the jit so an absorb is ONE host dispatch."""
+    flat = jnp.ravel(elems).astype(jnp.uint32)
+    pad = (-n) % P2.RATE
+    if pad:
+        flat = jnp.concatenate([flat, jnp.zeros((pad,), jnp.uint32)])
+    return _absorb_impl(state, flat, n)
+
+
+@functools.partial(jax.jit, static_argnames=("k",))
+def _squeeze_impl(state: jnp.ndarray, k: int):
+    """Squeeze k lanes; the permute loop unrolls at trace time (<= a few
+    permutes per challenge width used in this codebase)."""
+    out = []
+    while len(out) * P2.RATE < k:
+        state = P2._permute_impl(state)
+        out.append(state[:P2.RATE])
+    return state, jnp.concatenate(out)[:k]
+
+
 class Transcript:
     def __init__(self, domain: str):
         self._state = jnp.zeros((P2.WIDTH,), dtype=jnp.uint32)
         self.absorb(F.f_from_int(np.frombuffer(
             domain.encode()[:32].ljust(32, b"\0"), dtype=np.uint8).astype(np.int64)))
 
+    # -- raw sponge state (used by the fused kernel path) -------------------
+    @property
+    def state(self) -> jnp.ndarray:
+        """Current sponge state, shape (WIDTH,) uint32 Montgomery."""
+        return self._state
+
+    def set_state(self, state) -> None:
+        """Install a sponge state produced by an equivalent absorb/squeeze
+        sequence run elsewhere (e.g. inside a fused kernel)."""
+        self._state = jnp.asarray(state)
+
     # -- absorbing ----------------------------------------------------------
     def absorb(self, elems) -> None:
         """Absorb a flat (or any-shape) array of Montgomery field elements.
 
-        Length-bound into the capacity (prefix-free); jitted per length.
+        Length-bound into the capacity (prefix-free); jitted per shape.
         """
-        flat = jnp.ravel(jnp.asarray(elems)).astype(jnp.uint32)
-        n = flat.shape[0]
-        pad = (-n) % P2.RATE
-        if pad:
-            flat = jnp.concatenate([flat, jnp.zeros((pad,), jnp.uint32)])
-        self._state = _absorb_impl(self._state, flat, n)
+        elems = jnp.asarray(elems)
+        n = int(np.prod(elems.shape, dtype=np.int64)) if elems.ndim else 1
+        self._state = _absorb_any(self._state, elems, n)
 
     def absorb_digest(self, digest) -> None:
         self.absorb(digest)
@@ -58,11 +87,8 @@ class Transcript:
 
     # -- squeezing ----------------------------------------------------------
     def _squeeze(self, k: int) -> jnp.ndarray:
-        out = []
-        while len(out) * P2.RATE < k:
-            self._state = P2.permute(self._state)
-            out.append(self._state[:P2.RATE])
-        return jnp.concatenate(out)[:k]
+        self._state, out = _squeeze_impl(self._state, k)
+        return out
 
     def challenge_f(self) -> jnp.ndarray:
         """One Fp challenge (Montgomery scalar)."""

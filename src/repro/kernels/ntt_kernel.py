@@ -40,17 +40,26 @@ def _kernel(x_ref, tw_ref, o_ref, *, n: int, inverse: bool):
 
 
 def ntt_rows(x: jnp.ndarray, inverse: bool = False, block: int = 8,
-             interpret: bool = True) -> jnp.ndarray:
+             interpret: bool = True, force_pallas: bool = False
+             ) -> jnp.ndarray:
     """x: (rows, n) uint32 Montgomery; NTT along the trailing axis.
 
     The bit-reversal permutation happens host-side (a gather XLA fuses
     into the feed); the kernel runs the log2(n) butterfly stages in one
     VMEM residency.
+
+    On CPU (``interpret=True``) the identical butterfly schedule runs
+    directly under the reference jit (``ntt._ntt_impl``) — interpret-mode
+    pallas_call tracing unrolls the grid and costs seconds per shape;
+    ``force_pallas=True`` drives the real pallas_call wiring anyway (used
+    by the differential tests on small shapes).
     """
     rows, n = x.shape
     assert n & (n - 1) == 0
     if n == 1:
         return x
+    if interpret and not force_pallas:
+        return NTT._ntt_impl(x, inverse)
     block = min(block, rows)
     assert rows % block == 0
     x = x[:, NTT._bitrev(n)]

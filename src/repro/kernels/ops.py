@@ -3,15 +3,51 @@
 On TPU the kernels run compiled; on CPU (this container) interpret=True
 executes the kernel bodies in Python for correctness validation — the
 mode the test suite sweeps shapes/dtypes in. `on_tpu()` picks per-backend.
+
+Kernel path switch
+------------------
+``NANOZK_KERNEL_PATH`` selects the *prover-side* implementation:
+
+* ``ref`` (default) — the pure-jnp reference path in ``repro.core``.
+* ``fused`` — the Pallas kernel path: fused sum-check rounds
+  (``sumcheck_round.py``), kernel-batched Poseidon2 Merkle hashing,
+  modmatmul-backed partial evaluations, and the NTT kernel for RS
+  encoding.
+
+The switch is environment-driven and deliberately independent of
+``VerifyPolicy``: it changes *how* proofs are computed, never *what* is
+proved.  Both paths must produce byte-identical transcripts/attestations
+(the ref path is the oracle — see ``tests/test_kernel_parity.py``); a
+fused path that diverges by even one bit yields an invalid attestation.
 """
 from __future__ import annotations
 
+import functools
+import os
+
 import jax
+import jax.numpy as jnp
 
 from . import modmatmul as _mm
 from . import ntt_kernel as _ntt
 from . import poseidon2_kernel as _p2
 from . import sumcheck_fold as _fold
+from . import sumcheck_round as _round
+
+KERNEL_PATHS = ("ref", "fused")
+
+
+def kernel_path() -> str:
+    """Active prover kernel path: 'ref' (jnp oracle) or 'fused' (Pallas)."""
+    p = os.environ.get("NANOZK_KERNEL_PATH", "ref").strip().lower()
+    if p and p not in KERNEL_PATHS:
+        raise ValueError(
+            f"NANOZK_KERNEL_PATH={p!r}: expected one of {KERNEL_PATHS}")
+    return p or "ref"
+
+
+def use_fused() -> bool:
+    return kernel_path() == "fused"
 
 
 def on_tpu() -> bool:
@@ -28,6 +64,16 @@ def poseidon2_permute(states, **kw):
     return _p2.permute_batch(states, **kw)
 
 
+def poseidon2_compress(left, right, **kw):
+    kw.setdefault("interpret", not on_tpu())
+    return _p2.compress_pairs(left, right, **kw)
+
+
+def poseidon2_hash(elems, **kw):
+    kw.setdefault("interpret", not on_tpu())
+    return _p2.hash_rows(elems, **kw)
+
+
 def ntt(x, inverse: bool = False, **kw):
     kw.setdefault("interpret", not on_tpu())
     return _ntt.ntt_rows(x, inverse=inverse, **kw)
@@ -36,3 +82,39 @@ def ntt(x, inverse: bool = False, **kw):
 def sumcheck_fold(factors, c, **kw):
     kw.setdefault("interpret", not on_tpu())
     return _fold.fold_round(factors, c, **kw)
+
+
+def sumcheck_prove_rounds(factors, states, **kw):
+    """Fused multi-claim sum-check prover (see sumcheck_round.prove_rounds)."""
+    kw.setdefault("interpret", not on_tpu())
+    return _round.prove_rounds(factors, states, **kw)
+
+
+# ---------------------------------------------------------------------------
+# Kernel-backed multilinear partial evaluations (fused-path replacements for
+# mle.partial_eval_rows / partial_eval_cols).  eq^T @ mat and mat @ eq are
+# exact mod-p matmuls, so the modmatmul kernel's chunked fadd-tree reduction
+# produces identical field values to the jnp halving-tree reference.
+# ---------------------------------------------------------------------------
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def _partial_rows_impl(mat, eq, interpret):
+    return _mm.modmatmul(eq.T, mat, interpret=interpret).T
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def _partial_cols_impl(mat, eq, interpret):
+    return _mm.modmatmul(mat, eq, interpret=interpret)
+
+
+def partial_eval_rows_mm(mat, r_rows, **kw):
+    """(R, C) Fp matrix, bind row bits at r_rows ((log R, 4)) -> (C, 4)."""
+    from repro.core.mle import eq_points
+    kw.setdefault("interpret", not on_tpu())
+    return _partial_rows_impl(mat, eq_points(r_rows), kw["interpret"])
+
+
+def partial_eval_cols_mm(mat, r_cols, **kw):
+    """(R, C) Fp matrix, bind col bits at r_cols ((log C, 4)) -> (R, 4)."""
+    from repro.core.mle import eq_points
+    kw.setdefault("interpret", not on_tpu())
+    return _partial_cols_impl(mat, eq_points(r_cols), kw["interpret"])

@@ -27,11 +27,11 @@ def _internal_linear(state, diag):
     return F.fadd(F.fmul(state, diag), tot[..., None])
 
 
-def _kernel(x_ref, rcf_ref, rcp_ref, diag_ref, o_ref):
-    state = x_ref[...]                  # (bt, 16)
-    rcf = rcf_ref[...]                  # (RF, 16)
-    rcp = rcp_ref[...]                  # (RP, 1)
-    diag = diag_ref[...][0]             # (16,)
+def permute_value(state, rcf, rcp, diag):
+    """Poseidon2 on a traced (..., 16) value with round constants passed as
+    operands — the kernel-safe permutation body, shared by this kernel and
+    the fused sum-check round kernel (Pallas forbids captured device
+    constants, so jnp-path ``P2._permute_impl`` can't be reused directly)."""
     state = P2._external_linear(state)
     for r in range(P2.RF // 2):
         state = F.fadd(state, rcf[r])
@@ -45,18 +45,61 @@ def _kernel(x_ref, rcf_ref, rcp_ref, diag_ref, o_ref):
         state = F.fadd(state, rcf[r])
         state = P2._sbox(state)
         state = P2._external_linear(state)
-    o_ref[...] = state
+    return state
+
+
+def permute_value_scan(state, rcf, rcp, diag):
+    """Same permutation as ``permute_value`` but with the rounds under
+    lax.scan — keeps the traced graph one-round-sized (unrolling all 21
+    rounds exploded XLA compile times ~40x, EXPERIMENTS.md §Perf).  Used
+    by kernels running in interpret mode, where lax.scan is available."""
+    def full_round(st, rc):
+        st = F.fadd(st, rc)
+        st = P2._sbox(st)
+        return P2._external_linear(st), None
+
+    def partial_round(st, rc):
+        s0 = P2._sbox(F.fadd(st[..., 0], rc))
+        st = st.at[..., 0].set(s0)
+        return _internal_linear(st, diag), None
+
+    state = P2._external_linear(state)
+    state, _ = jax.lax.scan(full_round, state, rcf[:P2.RF // 2])
+    state, _ = jax.lax.scan(partial_round, state, rcp[:, 0])
+    state, _ = jax.lax.scan(full_round, state, rcf[P2.RF // 2:])
+    return state
+
+
+def round_constants():
+    """(rcf, rcp, diag) shaped for kernel operands."""
+    rcf = jnp.asarray(P2._RC_FULL_M)
+    rcp = jnp.asarray(P2._RC_PART_M).reshape(-1, 1)
+    diag = jnp.asarray(P2._DIAG_M).reshape(1, -1)
+    return rcf, rcp, diag
+
+
+def _kernel(x_ref, rcf_ref, rcp_ref, diag_ref, o_ref):
+    state = x_ref[...]                  # (bt, 16)
+    rcf = rcf_ref[...]                  # (RF, 16)
+    rcp = rcp_ref[...]                  # (RP, 1)
+    diag = diag_ref[...][0]             # (16,)
+    o_ref[...] = permute_value(state, rcf, rcp, diag)
+
+
+def _pick_block(n: int, block: int) -> int:
+    """Largest power-of-two divisor of n that is <= block (n >= 1)."""
+    block = min(block, n)
+    while n % block:
+        block //= 2
+    return max(block, 1)
 
 
 def permute_batch(states: jnp.ndarray, block: int = 256,
                   interpret: bool = True) -> jnp.ndarray:
     """states: (n, 16) uint32 Montgomery -> permuted states."""
     n = states.shape[0]
-    block = min(block, n)
-    assert n % block == 0
-    rcf = jnp.asarray(P2._RC_FULL_M)
-    rcp = jnp.asarray(P2._RC_PART_M).reshape(-1, 1)
-    diag = jnp.asarray(P2._DIAG_M).reshape(1, -1)
+    block = _pick_block(n, block)
+    rcf, rcp, diag = round_constants()
     rep = lambda shape: pl.BlockSpec(shape, lambda i: (0,) * len(shape))
     return pl.pallas_call(
         _kernel,
@@ -68,3 +111,62 @@ def permute_batch(states: jnp.ndarray, block: int = 256,
         out_shape=jax.ShapeDtypeStruct((n, P2.WIDTH), jnp.uint32),
         interpret=interpret,
     )(states, rcf, rcp, diag)
+
+
+# ---------------------------------------------------------------------------
+# Merkle-level hashing built on permute_batch. Both entries reproduce the
+# sponge/compression semantics of repro.core.poseidon2 exactly (same length
+# tag, same chunk schedule, same Davies-Meyer feedforward) so commitments and
+# Fiat-Shamir transcripts are byte-identical to the jnp reference path.
+#
+# On CPU (interpret=True, force_pallas=False) the permutation body executes
+# directly under the jit with the SAME operand-constant kernel code —
+# interpret-mode pallas_call tracing costs seconds per distinct shape, which
+# would dominate the fused CI runs; force_pallas=True drives the real
+# pallas_call wiring anyway (the differential tests do, on small shapes).
+# ---------------------------------------------------------------------------
+def _permute_rows(states: jnp.ndarray, block: int, interpret: bool,
+                  force_pallas: bool) -> jnp.ndarray:
+    if interpret and not force_pallas:
+        rcf, rcp, diag = round_constants()
+        return permute_value_scan(states, rcf, rcp, diag[0])
+    return permute_batch(states, block=block, interpret=interpret)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("block", "interpret", "force_pallas"))
+def compress_pairs(left: jnp.ndarray, right: jnp.ndarray, block: int = 256,
+                   interpret: bool = True,
+                   force_pallas: bool = False) -> jnp.ndarray:
+    """2-to-1 compression of (..., DIGEST) node pairs, kernel-batched."""
+    batch = left.shape[:-1]
+    states = jnp.concatenate([left, right], axis=-1).reshape(-1, P2.WIDTH)
+    out = _permute_rows(states, block, interpret, force_pallas)
+    out = out[:, :P2.DIGEST].reshape(batch + (P2.DIGEST,))
+    return F.fadd(out, left)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("block", "interpret", "force_pallas"))
+def hash_rows(elems: jnp.ndarray, block: int = 256, interpret: bool = True,
+              force_pallas: bool = False) -> jnp.ndarray:
+    """Sponge-hash along the trailing axis -> (..., DIGEST) digests.
+
+    Matches ``poseidon2.hash_elems`` element-for-element: zero state with the
+    unpadded length bound into the capacity lane, RATE-sized chunks added into
+    the rate lanes, one permutation per chunk (here a kernel-batched one)."""
+    batch = elems.shape[:-1]
+    n = elems.shape[-1]
+    pad = (-n) % P2.RATE
+    if pad:
+        elems = jnp.concatenate(
+            [elems, jnp.zeros(batch + (pad,), dtype=jnp.uint32)], axis=-1)
+    flat = elems.reshape(-1, elems.shape[-1])
+    rows = flat.shape[0]
+    state = jnp.zeros((rows, P2.WIDTH), dtype=jnp.uint32)
+    state = state.at[:, P2.RATE].set(F.fconst(n, (rows,)))
+    for k in range(flat.shape[1] // P2.RATE):
+        chunk = flat[:, k * P2.RATE:(k + 1) * P2.RATE]
+        state = state.at[:, :P2.RATE].set(F.fadd(state[:, :P2.RATE], chunk))
+        state = _permute_rows(state, block, interpret, force_pallas)
+    return state[:, :P2.DIGEST].reshape(batch + (P2.DIGEST,))

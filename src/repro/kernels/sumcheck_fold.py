@@ -28,8 +28,7 @@ def _kernel(c_ref, *refs, d: int):
     folded_outs = refs[d:2 * d]
     g_ref = refs[2 * d]
     c = c_ref[...]                      # (1, 4)
-    los = [r[0] for r in (i_ref[...] for i_ref in ins)]
-    ins_v = [i_ref[...] for i_ref in ins]
+    ins_v = [i_ref[...] for i_ref in ins]   # read each factor ref ONCE
     los = [v[0] for v in ins_v]         # (half_b, 4)
     his = [v[1] for v in ins_v]
     diffs = [F.f4sub(h, l) for h, l in zip(his, los)]

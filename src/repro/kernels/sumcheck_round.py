@@ -1,0 +1,239 @@
+"""Pallas kernel: fully-fused sum-check round, batched over claims.
+
+One launch per round index computes — for a batch of K independent claims
+sharing (n, d) — the round polynomial g(0..d), the Fiat-Shamir transcript
+absorb of g, the challenge squeeze, AND the fold by that challenge, all in
+one VMEM residency.  This removes the per-round host round-trip of the jnp
+reference prover (``core/sumcheck.py``), whose cost is dispatch, not FLOPs:
+each reference round issues dozens of small ops plus a device->host sync
+for the challenge.
+
+Byte-identity contract: BabyBear/Fp4 arithmetic is exact mod p, so any
+evaluation/reduction order yields identical field values; the sponge
+schedule here (length tag, RATE-chunk adds, one permutation per chunk, one
+squeeze permutation per challenge) replicates ``core/transcript.py``
+element-for-element.  Transcripts produced by this kernel are therefore
+byte-identical to the reference path — enforced by
+``tests/test_kernel_parity.py`` and the golden wire vectors.
+
+The sponge state rides through the kernel as a (K, 16) operand: claim k's
+transcript enters as row k and leaves updated, so K claims from different
+layer proofs (independent transcripts by construction) batch into the same
+launch — the engine's ``SumcheckRoundBatcher`` exploits exactly this.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Sequence, Tuple
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core import field as F
+from repro.core import poseidon2 as P2
+from repro.core import transcript as T
+from . import poseidon2_kernel as PK
+
+
+def _mont(v: int) -> np.uint32:
+    """Montgomery-form scalar as a numpy literal (kernel-safe: no captured
+    device constants)."""
+    return np.uint32((v % F.P) * F._R % F.P)
+
+
+def _tree_sum(x: jnp.ndarray) -> jnp.ndarray:
+    """Exact mod-p halving-tree sum over axis 1 of (bk, n, 4); n power of 2."""
+    while x.shape[1] > 1:
+        h = x.shape[1] // 2
+        x = F.f4add(x[:, :h], x[:, h:])
+    return x[:, 0]
+
+
+def _round_math(states, rcf, rcp, diag, vals, d: int, unroll: bool):
+    """The fused round body on traced values — single source of truth shared
+    by the Pallas kernel (refs in/out) and the interpret-mode direct call.
+
+    vals: d factor views (bk, 2, half, 4) as (lo, hi) pairs.
+    Returns (g (bk, d+1, 4), folded list of (bk, half, 4), states (bk, 16)).
+    """
+    if unroll:
+        permute = lambda s: PK.permute_value(s, rcf, rcp, diag)
+    else:
+        # scan-based rounds keep the traced graph one-round-sized (full
+        # unrolling exploded XLA compile times ~40x)
+        permute = lambda s: PK.permute_value_scan(s, rcf, rcp, diag)
+
+    los = [v[:, 0] for v in vals]           # (bk, half, 4)
+    his = [v[:, 1] for v in vals]
+    diffs = [F.f4sub(h, l) for h, l in zip(his, los)]
+
+    # g(t) for t = 0..d: evaluate each factor at X=t by repeated +diff.
+    cur = list(los)
+    evals = []
+    for t in range(d + 1):
+        if t > 0:
+            cur = [F.f4add(x, dd) for x, dd in zip(cur, diffs)]
+        prod = cur[0]
+        for f in cur[1:]:
+            prod = F.f4mul(prod, f)
+        evals.append(_tree_sum(prod))       # (bk, 4)
+    g = jnp.stack(evals, axis=1)            # (bk, d+1, 4)
+
+    # Transcript absorb of g — mirrors transcript._absorb_impl exactly.
+    bk = g.shape[0]
+    n_abs = 4 * (d + 1)
+    flat = g.reshape(bk, n_abs)
+    pad = (-n_abs) % P2.RATE
+    if pad:
+        flat = jnp.concatenate(
+            [flat, jnp.zeros((bk, pad), jnp.uint32)], axis=1)
+    st = states
+    st = st.at[:, P2.RATE].set(F.fadd(st[:, P2.RATE], _mont(n_abs)))
+    for k in range(flat.shape[1] // P2.RATE):
+        chunk = flat[:, k * P2.RATE:(k + 1) * P2.RATE]
+        st = st.at[:, :P2.RATE].set(F.fadd(st[:, :P2.RATE], chunk))
+        st = permute(st)
+
+    # Challenge squeeze (transcript.challenge_f4: one permute, lanes 0..3)
+    # and fold by it — the folded factors never leave the fused residency.
+    st = permute(st)
+    c = st[:, None, :4]                     # (bk, 1, 4)
+    folded = [F.f4add(l, F.f4mul(jnp.broadcast_to(c, l.shape), dd))
+              for l, dd in zip(los, diffs)]
+    return g, folded, st
+
+
+def _round_kernel(st_ref, rcf_ref, rcp_ref, diag_ref, *refs,
+                  d: int, unroll: bool):
+    # refs: d factor inputs (bk, 2, half, 4) as (lo, hi) pairs, then outputs:
+    #       g (bk, d+1, 4), d folded (bk, half, 4), new states (bk, 16)
+    ins = refs[:d]
+    g_ref = refs[d]
+    folded_outs = refs[d + 1:2 * d + 1]
+    st_out = refs[2 * d + 1]
+    vals = [r[...] for r in ins]            # read each factor ref ONCE
+    g, folded, st = _round_math(
+        st_ref[...], rcf_ref[...], rcp_ref[...], diag_ref[...][0],
+        vals, d, unroll)
+    g_ref[...] = g
+    st_out[...] = st
+    for i in range(d):
+        folded_outs[i][...] = folded[i]
+
+
+@functools.partial(jax.jit, static_argnames=("pallas", "unroll"))
+def _launch_round(factors, states, pallas: bool, unroll: bool):
+    """One fused sum-check round for all K claims: g evals, transcript
+    absorb, challenge squeeze, fold.  Jitted per (K, n, d) — and the jit
+    cache is shared across *sum-checks*: every claim whose current length
+    is n hits the same compiled unit, so a whole layer proof needs only
+    one compile per (K, power-of-two, d).  On TPU the body is one Pallas
+    launch.
+
+    Accepts single-claim shapes ((n, 4) factors, (16,) state) or batched
+    ((K, n, 4), (K, 16)); the batch axis is normalized inside the jit so
+    callers never pay an eager expand_dims.  Returns (g, folded factors,
+    new states, challenges (K, 4))."""
+    d = len(factors)
+    n = factors[0].shape[-2]
+    half = n // 2
+    vals = [f.reshape(-1, 2, half, 4) for f in factors]
+    states = states.reshape(-1, P2.WIDTH)
+    K = states.shape[0]
+    rcf, rcp, diag = PK.round_constants()
+    if not pallas:
+        # Interpret-mode execution of the SAME fused body, directly under
+        # the jit: one traced graph, one dispatch per round.  (Driving
+        # pl.pallas_call(interpret=True) here is semantically identical
+        # but its tracing overhead is ~5 s per launch — the parity tests
+        # cover the real pallas wiring on small shapes.)
+        g, folded, st = _round_math(states, rcf, rcp, diag, vals, d, unroll)
+        return g, tuple(folded), st, st[:, :4]
+    bk = PK._pick_block(K, 8)
+    rep = lambda shape: pl.BlockSpec(shape, lambda i: (0,) * len(shape))
+    in_specs = [pl.BlockSpec((bk, P2.WIDTH), lambda i: (i, 0)),
+                rep(tuple(rcf.shape)), rep(tuple(rcp.shape)),
+                rep(tuple(diag.shape))] + [
+        pl.BlockSpec((bk, 2, half, 4), lambda i: (i, 0, 0, 0))
+        for _ in range(d)]
+    out_specs = [pl.BlockSpec((bk, d + 1, 4), lambda i: (i, 0, 0))] + [
+        pl.BlockSpec((bk, half, 4), lambda i: (i, 0, 0))
+        for _ in range(d)] + [pl.BlockSpec((bk, P2.WIDTH), lambda i: (i, 0))]
+    out_shape = [jax.ShapeDtypeStruct((K, d + 1, 4), jnp.uint32)] + [
+        jax.ShapeDtypeStruct((K, half, 4), jnp.uint32)
+        for _ in range(d)] + [jax.ShapeDtypeStruct((K, P2.WIDTH), jnp.uint32)]
+    outs = pl.pallas_call(
+        functools.partial(_round_kernel, d=d, unroll=unroll),
+        grid=(K // bk,),
+        in_specs=in_specs,
+        out_specs=out_specs,
+        out_shape=out_shape,
+        interpret=not unroll,
+    )(states, rcf, rcp, diag, *vals)
+    g = outs[0]
+    folded = tuple(outs[1:d + 1])
+    new_states = outs[d + 1]
+    return g, folded, new_states, new_states[:, :4]
+
+
+@jax.jit
+def _epilogue(gs, cs, factors, states):
+    """Stack the per-round outputs and absorb the final evals, exactly as
+    the reference prover's epilogue does.  Jitted per (K, d, m)."""
+    d = len(factors)
+    finals = jnp.stack([f[:, 0] for f in factors], axis=1)   # (K, d, 4)
+    states = jax.vmap(
+        lambda s, e: T._absorb_any(s, e, 4 * d))(states, finals)
+    return jnp.stack(gs, axis=1), jnp.stack(cs, axis=1), finals, states
+
+
+def _prove_rounds_impl(factors, states, pallas: bool, unroll: bool):
+    # A python loop of per-round jitted launches, NOT one enclosing jit:
+    # the per-round units are cached by (K, half, d) and shared across all
+    # sum-checks in a proof (an enclosing jit would recompile the whole
+    # m-round graph per distinct n — tens of seconds per shape on CPU).
+    # Warm per-round dispatch is microseconds; nothing syncs to host
+    # mid-prove, and no eager ops run between launches.
+    n = factors[0].shape[-2]
+    m = n.bit_length() - 1
+    gs, cs = [], []
+    for _ in range(m):
+        g, factors, states, c = _launch_round(factors, states,
+                                              pallas=pallas, unroll=unroll)
+        gs.append(g)
+        cs.append(c)                       # the challenge the kernel folded by
+    return _epilogue(tuple(gs), tuple(cs), factors, states)
+
+
+def prove_rounds(factors: Sequence[jnp.ndarray], states: jnp.ndarray,
+                 interpret: bool = True, force_pallas: bool = False
+                 ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Run the full sum-check prover for K batched claims, one fused launch
+    per round index, all m rounds under a single jit.
+
+    factors: d arrays of shape (K, n, 4) — claim k's factor t is
+    ``factors[t][k]``; n must be a power of two >= 2.  states: (K, 16)
+    sponge states, one transcript per claim.  Single-claim callers may
+    pass (n, 4) factors with a (16,) state and read row 0 of each output.
+
+    On TPU (``interpret=False``) each round is one compiled Pallas launch.
+    On CPU the identical kernel body executes directly under the jit
+    (interpret-mode pallas_call tracing costs ~5 s per launch, which would
+    dominate CI; ``force_pallas=True`` drives the real pallas_call in
+    interpret mode anyway — used by the differential tests).
+
+    Returns ``(round_polys (K, m, d+1, 4), points (K, m, 4),
+    final_evals (K, d, 4), new_states (K, 16))`` — exactly the data the
+    reference prover would have produced claim-by-claim, with transcripts
+    advanced identically.
+    """
+    factors = tuple(jnp.asarray(f) for f in factors)
+    shape = factors[0].shape
+    n = shape[-2]
+    assert all(f.shape == shape for f in factors) and shape[-1] == 4
+    assert n >= 2 and n & (n - 1) == 0
+    return _prove_rounds_impl(factors, jnp.asarray(states),
+                              pallas=force_pallas or not interpret,
+                              unroll=not interpret)

@@ -35,11 +35,16 @@ import time
 from typing import Dict, List, Optional, Sequence, Set, Tuple
 
 import numpy as np
+import jax
+import jax.numpy as jnp
 
 from repro.core import blocks as B
 from repro.core import chain as CH
 from repro.core import layer_proof as LP
 from repro.core import pcs as PCS
+from repro.core import poseidon2 as P2
+from repro.core import sumcheck as SC
+from repro.kernels import ops as KOPS
 from .scheduler import ProofScheduler, ScheduleStats
 
 
@@ -112,6 +117,106 @@ class WeightCommitCache:
             self._by_digest[digest] = wt
             self._by_root[root_key] = wt
         return wt
+
+
+# ---------------------------------------------------------------------------
+# Cross-layer sum-check round batching (fused kernel path, thread backend).
+#
+# The fused kernel (kernels/sumcheck_round.py) carries the sponge state as a
+# (K, 16) operand, so K sum-check claims from *different* layer proofs —
+# independent transcripts by construction — can share one launch per round
+# index.  This batcher is the rendezvous point: worker threads register for
+# the duration of their ProofJob, sumcheck.prove routes their claims here,
+# and whichever thread completes a wave (all registered threads have a
+# pending claim, or a straggler timeout fires) stacks the same-shape claims
+# and runs them through ONE KOPS.sumcheck_prove_rounds call.  Each claim
+# still rides its own sponge row, so per-layer transcripts remain
+# byte-identical to the sequential reference path.
+# ---------------------------------------------------------------------------
+class SumcheckRoundBatcher:
+    """Coalesces concurrent same-shape sum-check claims into multi-claim
+    fused kernel launches.  Installed via ``sumcheck.set_round_batcher``
+    by ``ProverEngine.prove_layers`` (thread backend, fused path, >1
+    worker); threads that never registered bypass it entirely."""
+
+    def __init__(self, timeout: float = 0.05):
+        self._cv = threading.Condition()
+        self._registered: Set[int] = set()
+        self._pending: Dict[int, Tuple[tuple, jnp.ndarray]] = {}
+        self._results: Dict[int, tuple] = {}
+        self._timeout = timeout
+        self.batched_claims = 0      # claims that shared a launch with >=1 peer
+        self.launch_waves = 0        # fused launches issued
+
+    def register(self) -> None:
+        with self._cv:
+            self._registered.add(threading.get_ident())
+
+    def deregister(self) -> None:
+        with self._cv:
+            self._registered.discard(threading.get_ident())
+            # a departing thread may be the last hold-out of a wave
+            self._cv.notify_all()
+
+    def registered(self) -> bool:
+        return threading.get_ident() in self._registered
+
+    def _wave_complete(self) -> bool:
+        return self._registered <= set(self._pending)
+
+    def _flush(self) -> None:
+        """Run every pending claim, grouped by (d, n) into stacked launches.
+        Caller holds the lock."""
+        pending, self._pending = self._pending, {}
+        groups: Dict[Tuple[int, int], List[int]] = {}
+        for ident, (factors, _) in pending.items():
+            groups.setdefault(
+                (len(factors), factors[0].shape[-2]), []).append(ident)
+        for (d, n), idents in groups.items():
+            K = len(idents)
+            kp = 1 << max(K - 1, 0).bit_length()   # pad: bounded jit keys
+            fs = []
+            for t in range(d):
+                rows = [pending[i][0][t] for i in idents]
+                rows += [jnp.zeros((n, 4), jnp.uint32)] * (kp - K)
+                fs.append(jnp.stack(rows))
+            sts = jnp.stack(
+                [pending[i][1] for i in idents]
+                + [jnp.zeros((P2.WIDTH,), jnp.uint32)] * (kp - K))
+            rp, pts, fins, sts_out = KOPS.sumcheck_prove_rounds(
+                tuple(fs), sts)
+            rp_np, fin_np = jax.device_get((rp, fins))
+            for k, ident in enumerate(idents):
+                self._results[ident] = (
+                    np.ascontiguousarray(rp_np[k, :, 1:]), pts[k],
+                    fin_np[k], sts_out[k])
+            self.launch_waves += 1
+            if K > 1:
+                self.batched_claims += K
+        self._cv.notify_all()
+
+    def prove(self, factors: tuple, transcript) -> tuple:
+        """Entry point called from sumcheck.prove on a registered worker
+        thread: submit the claim, wait for the wave, return
+        (SumcheckProof, point) with the transcript advanced exactly as the
+        direct path would have."""
+        me = threading.get_ident()
+        with self._cv:
+            self._pending[me] = (factors, transcript.state)
+            self._cv.notify_all()
+            deadline = time.monotonic() + self._timeout
+            while me not in self._results:
+                if self._wave_complete():
+                    self._flush()
+                    continue
+                remaining = deadline - time.monotonic()
+                if remaining <= 0:      # straggler guard: launch a partial wave
+                    self._flush()
+                    continue
+                self._cv.wait(remaining)
+            rp, pt, fin, st = self._results.pop(me)
+        transcript.set_state(st)
+        return SC.SumcheckProof(round_polys=rp, final_evals=fin), pt
 
 
 # ---------------------------------------------------------------------------
@@ -253,6 +358,7 @@ class ProverEngine:
                     boundaries[l + 1], fwd.traces[l], self.params,
                     job.check_input_range)
 
+        batcher = None
         if self.backend == "process":
             pool = self._ensure_pool()
 
@@ -261,11 +367,30 @@ class ProverEngine:
                 # queue/requeue protocol is unchanged across backends
                 return pool.apply(_process_prove_layer, (payload(l),))
         else:
+            # thread backend + fused kernels + a real fleet: rendezvous the
+            # workers' sum-check claims into multi-claim fused launches.
+            # Transcripts are per-claim sponge rows, so results are
+            # byte-identical with or without the batcher.
+            batcher = (SumcheckRoundBatcher()
+                       if self.workers > 1 and KOPS.use_fused() else None)
+
             def prove_one(l: int) -> LP.LayerProof:
-                return _process_prove_layer(payload(l))
+                if batcher is None:
+                    return _process_prove_layer(payload(l))
+                batcher.register()
+                try:
+                    return _process_prove_layer(payload(l))
+                finally:
+                    batcher.deregister()
 
         sched = ProofScheduler(workers=self.workers,
                                fail_claims=self.fail_claims)
+        if self.backend == "thread" and batcher is not None:
+            SC.set_round_batcher(batcher)
+            try:
+                return sched.run([j.layer for j in jobs], prove_one)
+            finally:
+                SC.set_round_batcher(None)
         return sched.run([j.layer for j in jobs], prove_one)
 
     # -- full pipeline ------------------------------------------------------

@@ -66,13 +66,24 @@ def test_golden_v2_decodes_and_verifies(golden, query, policy):
     assert rep.checked_layers == 1
 
 
-def test_golden_reencode_is_byte_identical(golden):
+@pytest.mark.parametrize("path", ["ref", "fused"])
+def test_golden_reencode_is_byte_identical(golden, path):
     """Canonical encoding: decode -> re-encode reproduces the committed
-    bytes exactly, for both wire versions."""
-    att1 = api.Attestation.from_bytes(golden["golden_v1.bin"])
-    assert att1.to_bytes(1) == golden["golden_v1.bin"]
-    att2 = api.Attestation.from_bytes(golden["golden_v2.bin"])
-    assert att2.to_bytes(2) == golden["golden_v2.bin"]
+    bytes exactly, for both wire versions — and identically under both
+    kernel paths (the wire layer must be NANOZK_KERNEL_PATH-independent;
+    the fused *re-prove* equality lives in test_transcript_determinism)."""
+    from test_kernel_parity import kernel_path
+    with kernel_path(path):
+        att1 = api.Attestation.from_bytes(golden["golden_v1.bin"])
+        assert att1.to_bytes(1) == golden["golden_v1.bin"]
+        att2 = api.Attestation.from_bytes(golden["golden_v2.bin"])
+        assert att2.to_bytes(2) == golden["golden_v2.bin"]
+        # a re-encode through the non-cached path must also reproduce the
+        # wire bytes (from_bytes primes a wire cache; drop it)
+        att1.__dict__.pop("_wire_cache", None)
+        att2.__dict__.pop("_wire_cache", None)
+        assert att1.to_bytes(1) == golden["golden_v1.bin"]
+        assert att2.to_bytes(2) == golden["golden_v2.bin"]
 
 
 def test_golden_versions_agree_on_metadata(golden):

@@ -1,0 +1,102 @@
+"""Transcript determinism across kernel paths and prover backends.
+
+The kernel path switch (``NANOZK_KERNEL_PATH=ref|fused``) and the prover
+fleet topology (thread vs process workers, 1 vs N of them) change *how*
+an attestation is computed — never a single byte of *what* is attested.
+This module proves it end to end: the same query against the golden toy
+model yields byte-identical serialized attestations (both wire versions)
+under every combination, and they all match the committed golden vectors.
+
+``prove_seconds`` is wall-clock telemetry embedded in the attestation
+head (and covered by the body sha256), so comparisons normalize it to 0
+and drop the decode-time wire cache first — everything else must agree
+bit-for-bit, or the fused path has diverged from the Fiat-Shamir oracle.
+"""
+import os
+
+import numpy as np
+import pytest
+
+from repro import api
+from repro.core import blocks as B
+
+from test_kernel_parity import kernel_path
+
+DATA = os.path.join(os.path.dirname(__file__), "data")
+CFG = B.BlockCfg(family="gpt2", d=8, dff=16, heads=1, kv_heads=1, dh=8,
+                 seq=4)
+QUERIES = 1
+
+
+def _weights():
+    rng = np.random.default_rng(1234)
+    return [B.init_weights(CFG, rng)]
+
+
+def _query():
+    qrng = np.random.default_rng(5678)
+    return np.clip(np.round(qrng.normal(0, 0.5, (CFG.d_pad, CFG.seq))
+                            * 256), -32768, 32767).astype(np.int64)
+
+
+def _canonical_bytes(att):
+    """(v1, v2) wire bytes with the telemetry float normalized out."""
+    att.prove_seconds = 0.0
+    att.__dict__.pop("_wire_cache", None)
+    return att.to_bytes(1), att.to_bytes(2)
+
+
+def _attest(path, workers=1, backend="thread"):
+    with kernel_path(path):
+        with api.ProofService([CFG], _weights(), default_queries=QUERIES,
+                              workers=workers, backend=backend,
+                              name="golden-model") as svc:
+            att = svc.attest(_query(), api.VerifyPolicy(pcs_queries=QUERIES),
+                             tokens=np.arange(3, dtype=np.int32))
+    return _canonical_bytes(att)
+
+
+@pytest.fixture(scope="module")
+def ref_bytes():
+    return _attest("ref")
+
+
+@pytest.fixture(scope="module")
+def golden_bytes():
+    out = []
+    for name in ("golden_v1.bin", "golden_v2.bin"):
+        p = os.path.join(DATA, name)
+        if not os.path.exists(p):
+            pytest.skip(f"golden vector {name} not generated")
+        with open(p, "rb") as fh:
+            out.append(api.Attestation.from_bytes(fh.read()))
+    return tuple(_canonical_bytes(a)[v] for v, a in enumerate(out))
+
+
+def test_ref_matches_committed_goldens(ref_bytes, golden_bytes):
+    """The reference path still reproduces the committed wire vectors."""
+    assert ref_bytes[0] == golden_bytes[0]
+    assert ref_bytes[1] == golden_bytes[1]
+
+
+def test_fused_matches_ref_byte_identical(ref_bytes, golden_bytes):
+    """THE oracle contract: the fused kernel path re-proves the golden
+    query to byte-identical v1 AND v2 attestations."""
+    fused = _attest("fused")
+    assert fused[0] == ref_bytes[0]
+    assert fused[1] == ref_bytes[1]
+    assert fused[0] == golden_bytes[0]
+    assert fused[1] == golden_bytes[1]
+
+
+def test_fused_thread_fleet_matches_ref(ref_bytes):
+    """Fused path + 2 thread workers (SumcheckRoundBatcher active for
+    multi-layer models; claim coalescing must be transcript-neutral)."""
+    assert _attest("fused", workers=2) == ref_bytes
+
+
+def test_fused_process_backend_matches_ref(ref_bytes):
+    """Fused path + spawned process worker: the child re-reads
+    NANOZK_KERNEL_PATH from its inherited environment and must land on
+    the same bytes."""
+    assert _attest("fused", backend="process") == ref_bytes
