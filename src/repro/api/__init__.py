@@ -16,7 +16,7 @@ deprecated shims over the same engine.
 """
 from .codec import CodecError, decode_obj, encode_obj, pack, unpack
 from .service import (ProofService, StreamingVerifier, select_layers,
-                      verify)
+                      verify, verify_batch)
 from .types import (PROTOCOL_VERSION, Attestation, ModelCard, VerifyPolicy,
                     VerifyReport, lut_table_digests)
 
@@ -24,5 +24,5 @@ __all__ = [
     "Attestation", "CodecError", "ModelCard", "PROTOCOL_VERSION",
     "ProofService", "StreamingVerifier", "VerifyPolicy", "VerifyReport",
     "decode_obj", "encode_obj", "lut_table_digests", "pack",
-    "select_layers", "unpack", "verify",
+    "select_layers", "unpack", "verify", "verify_batch",
 ]

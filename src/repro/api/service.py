@@ -17,6 +17,7 @@ reason string.
 """
 from __future__ import annotations
 
+import threading
 import time
 from typing import Dict, List, Optional, Sequence, Union
 
@@ -105,6 +106,8 @@ class ProofService:
                              else WeightCommitCache())
         self._engines: Dict[int, ProverEngine] = {}
         self._card: Optional[ModelCard] = None
+        self._lock = threading.Lock()     # engine/card creation — attest()
+                                          # itself may run concurrently
         self.queries_served = 0
         self.last_report = None           # EngineReport of the last attest
 
@@ -122,17 +125,18 @@ class ProofService:
 
     # -- engines ------------------------------------------------------------
     def engine_for(self, pcs_queries: int) -> ProverEngine:
-        eng = self._engines.get(pcs_queries)
-        if eng is None:
-            params = PCS.PCSParams(blowup=self.pcs_blowup,
-                                   queries=pcs_queries)
-            eng = ProverEngine(self.block_cfgs, self.weights, params,
-                               weight_cache=self.weight_cache,
-                               workers=self.workers,
-                               fail_claims=self.fail_claims,
-                               backend=self.backend)
-            self._engines[pcs_queries] = eng
-        return eng
+        with self._lock:
+            eng = self._engines.get(pcs_queries)
+            if eng is None:
+                params = PCS.PCSParams(blowup=self.pcs_blowup,
+                                       queries=pcs_queries)
+                eng = ProverEngine(self.block_cfgs, self.weights, params,
+                                   weight_cache=self.weight_cache,
+                                   workers=self.workers,
+                                   fail_claims=self.fail_claims,
+                                   backend=self.backend)
+                self._engines[pcs_queries] = eng
+            return eng
 
     # -- published commitment ------------------------------------------------
     @property
@@ -144,12 +148,15 @@ class ProofService:
         """
         if self._card is None:
             eng = self.engine_for(self.default_queries)
-            self._card = ModelCard(
+            card = ModelCard(
                 arch=tuple(self.block_cfgs),
                 wt_roots=tuple(np.asarray(w.root) for w in eng.wt_commits),
                 lut_digests=_local_lut_digests(),
                 pcs_blowup=self.pcs_blowup,
                 name=self.name)
+            with self._lock:        # concurrent builders agree byte-for-byte
+                if self._card is None:
+                    self._card = card
         return self._card
 
     # -- the one prover entry point ------------------------------------------
@@ -173,6 +180,53 @@ class ProofService:
                     else np.zeros(0, np.int32)),
             proof=proof, proved_layers=list(subset), policy=policy,
             prove_seconds=dt)
+
+    def attest_many(self, queries: Sequence[np.ndarray],
+                    policies: Optional[Sequence[VerifyPolicy]] = None,
+                    tokens: Optional[Sequence[np.ndarray]] = None
+                    ) -> List[Attestation]:
+        """Attest a WINDOW of queries with coalesced stage-2 commits.
+
+        The gateway's cross-query coalescing entry point: every query's
+        boundary activations share ONE batched NTT/Merkle commit pass and
+        all ``(query, layer)`` proof jobs drain the same resident fleet
+        (``ProverEngine.prove_many``).  All policies in a window must agree
+        on ``pcs_queries`` (the PCS-parameter knob — it changes the
+        commitment shape, so it is the coalescing key); budgets/selectors
+        may differ per query.  Each returned attestation is bit-identical
+        (modulo the ``prove_seconds`` telemetry float) to what a serial
+        ``attest`` would have produced.
+        """
+        K = len(queries)
+        if policies is None:
+            policies = [VerifyPolicy(pcs_queries=self.default_queries)] * K
+        policies = list(policies)
+        assert len(policies) == K
+        qcounts = {p.pcs_queries for p in policies}
+        assert len(qcounts) <= 1, \
+            f"attest_many window mixes pcs_queries {sorted(qcounts)}"
+        if K == 0:
+            return []
+        subsets = [select_layers(p, len(self.block_cfgs),
+                                 self.fisher_scores) for p in policies]
+        eng = self.engine_for(policies[0].pcs_queries)
+        t0 = time.monotonic()
+        proofs, report = eng.prove_many(
+            [np.asarray(q) for q in queries], subsets)
+        dt = time.monotonic() - t0
+        self.queries_served += K
+        self.last_report = report
+        model_id = self.model_card.model_id
+        return [
+            Attestation(
+                version=PROTOCOL_VERSION, model_id=model_id,
+                tokens=(np.asarray(tokens[i])
+                        if tokens is not None and tokens[i] is not None
+                        else np.zeros(0, np.int32)),
+                proof=proofs[i], proved_layers=list(subsets[i]),
+                policy=policies[i],
+                prove_seconds=dt / K)   # window wall, amortized (telemetry)
+            for i in range(K)]
 
 
 # ---------------------------------------------------------------------------
@@ -202,12 +256,17 @@ class _VerifySession:
 
     def __init__(self, query, model_card, req_policy,
                  t0: Optional[float] = None,
-                 wire_version: Optional[int] = None):
+                 wire_version: Optional[int] = None,
+                 shared: Optional[Dict] = None):
         self.t0 = time.monotonic() if t0 is None else t0
         self.query = query
         self.card = model_card
         self.req_policy = req_policy
         self.wire_version = wire_version   # None: object never hit the wire
+        # batch-verify memo (one ModelCard, many attestations): caches the
+        # card's content address, the LUT-digest audit, and per-policy
+        # selector recomputation across sessions.
+        self.shared: Dict = {} if shared is None else shared
         self.base: Dict = dict(attestation_bytes=0)
         self.cfgs: List = []
         self.params: Optional[PCS.PCSParams] = None
@@ -270,16 +329,22 @@ class _VerifySession:
                 f"minimum v{min_wire}")
         if not isinstance(self.card, ModelCard):
             return self._reject("model card unavailable")
-        if info["model_id"] != self.card.model_id:
+        card_id = self.shared.get("model_id")
+        if card_id is None:      # content address: one encode per batch
+            card_id = self.card.model_id
+            self.shared["model_id"] = card_id
+        if info["model_id"] != card_id:
             return self._reject(
                 f"model id mismatch: attestation is for "
-                f"{info['model_id']}, card is {self.card.model_id}")
-        local_luts = _local_lut_digests()
-        for lname, digest in sorted(self.card.lut_digests.items()):
-            if local_luts.get(lname) != digest:
-                return self._reject(
-                    f"LUT table digest mismatch for {lname!r}: verifier "
-                    "tables differ from the published card")
+                f"{info['model_id']}, card is {card_id}")
+        if not self.shared.get("lut_ok"):
+            local_luts = _local_lut_digests()
+            for lname, digest in sorted(self.card.lut_digests.items()):
+                if local_luts.get(lname) != digest:
+                    return self._reject(
+                        f"LUT table digest mismatch for {lname!r}: verifier "
+                        "tables differ from the published card")
+            self.shared["lut_ok"] = True
 
         cfgs = list(self.card.arch)
         L = len(cfgs)
@@ -328,8 +393,14 @@ class _VerifySession:
             # policy — a prover must not get to pick which layers are
             # audited (paper §5.2's whole point).  Fisher selection
             # depends on server-side scores, so there only the count is
-            # enforceable client-side.
-            expected = select_layers(pol, L)
+            # enforceable client-side.  Batch verify memoizes the
+            # recomputation per (policy, L) — VerifyPolicy is frozen,
+            # hence hashable; a policy carrying unhashable attacker
+            # fields lands in the outer reject handler.
+            expected = self.shared.get(("sel", pol, L))
+            if expected is None:
+                expected = select_layers(pol, L)
+                self.shared[("sel", pol, L)] = expected
             if sorted(idxs) != sorted(expected):
                 return self._reject(
                     f"proved layers {sorted(idxs)} do not match the "
@@ -421,11 +492,22 @@ class StreamingVerifier:
     final (latched) rejection; ``finish`` returns the final verdict.
     Malformed, truncated, reordered, or tampered streams come back as
     reasoned rejections — never exceptions.
+
+    Flood hardening: a sender must not be able to pin unbounded verifier
+    memory or spin it forever.  ``max_buffered_bytes`` caps the bytes
+    buffered ahead of the next completed frame (a stream whose announced
+    frame never completes is rejected once the buffer crosses the cap);
+    ``max_stalled_feeds`` caps consecutive zero-byte ``feed`` calls (a
+    zero-progress chunk sequence).  Both rejections are reasoned
+    ``VerifyReport``s, same as every other failure.
     """
 
     def __init__(self, query: Optional[np.ndarray],
                  model_card: Union[ModelCard, bytes, bytearray, memoryview],
-                 policy: Optional[VerifyPolicy] = None):
+                 policy: Optional[VerifyPolicy] = None,
+                 max_buffered_bytes: int = 256 << 20,
+                 max_stalled_feeds: int = 256,
+                 shared: Optional[Dict] = None):
         t0 = time.monotonic()
         card_err = None
         if isinstance(model_card, (bytes, bytearray, memoryview)):
@@ -435,9 +517,12 @@ class StreamingVerifier:
                 card_err = f"model card decode failed: {e}"
                 model_card = None
         self.session = _VerifySession(query, model_card, policy, t0=t0,
-                                      wire_version=2)
+                                      wire_version=2, shared=shared)
         self.reader = codec.FrameReader(KIND_ATTESTATION)
         self.fed = 0
+        self.max_buffered_bytes = int(max_buffered_bytes)
+        self.max_stalled_feeds = int(max_stalled_feeds)
+        self._stalled = 0
         self.final_report: Optional[VerifyReport] = None
         if card_err is not None:
             self.final_report = self.session._reject(card_err)
@@ -445,13 +530,30 @@ class StreamingVerifier:
     def feed(self, chunk) -> List[VerifyReport]:
         if self.final_report is not None:
             return []
+        chunk = bytes(chunk)
         self.fed += len(chunk)
         self.session.base["attestation_bytes"] = self.fed
+        if not chunk:
+            self._stalled += 1
+            if self._stalled > self.max_stalled_feeds:
+                self.final_report = self.session._reject(
+                    f"attestation stream rejected: {self._stalled} "
+                    "consecutive zero-progress chunks")
+                return [self.final_report]
+            return []
+        self._stalled = 0
         try:
-            frames = self.reader.feed(bytes(chunk))
+            frames = self.reader.feed(chunk)
         except codec.CodecError as e:
             self.final_report = self.session._reject(
                 f"attestation stream rejected: {e}")
+            return [self.final_report]
+        if len(self.reader.buf) > self.max_buffered_bytes:
+            self.final_report = self.session._reject(
+                "attestation stream rejected: "
+                f"{len(self.reader.buf)} bytes buffered without a "
+                f"completed frame exceeds the {self.max_buffered_bytes}"
+                "-byte cap")
             return [self.final_report]
         out: List[VerifyReport] = []
         for fkind, obj in frames:
@@ -507,7 +609,8 @@ class StreamingVerifier:
 def verify(attestation: Union[Attestation, bytes, bytearray, memoryview],
            query: Optional[np.ndarray],
            model_card: Union[ModelCard, bytes, bytearray, memoryview],
-           policy: Optional[VerifyPolicy] = None) -> VerifyReport:
+           policy: Optional[VerifyPolicy] = None,
+           _shared: Optional[Dict] = None) -> VerifyReport:
     """Verify an attestation against the client's own query + model card.
 
     ``attestation`` / ``model_card`` may be the wire bytes — decoding
@@ -534,7 +637,8 @@ def verify(attestation: Union[Attestation, bytes, bytearray, memoryview],
     if isinstance(attestation, (bytes, bytearray, memoryview)):
         data = bytes(attestation)
         if codec.sniff_version(data) == 2:
-            sv = StreamingVerifier(query, model_card, policy)
+            sv = StreamingVerifier(query, model_card, policy,
+                                   shared=_shared)
             sv.feed(data)
             return sv.finish()
         wire_len = len(data)
@@ -548,7 +652,7 @@ def verify(attestation: Union[Attestation, bytes, bytearray, memoryview],
         wire_version = attestation.__dict__.get("_wire_version")
 
     sess = _VerifySession(query, model_card, policy, t0=t0,
-                          wire_version=wire_version)
+                          wire_version=wire_version, shared=_shared)
     sess.base["attestation_bytes"] = wire_len
 
     # the codec rebuilds dataclasses without type validation, so every
@@ -581,3 +685,36 @@ def verify(attestation: Union[Attestation, bytes, bytearray, memoryview],
         if rep is not None:
             return rep
     return sess.final()
+
+
+def verify_batch(attestations: Sequence,
+                 queries: Sequence[Optional[np.ndarray]],
+                 model_card: Union[ModelCard, bytes, bytearray, memoryview],
+                 policies: Union[VerifyPolicy, Sequence[Optional[
+                     VerifyPolicy]], None] = None) -> List[VerifyReport]:
+    """Verify MANY attestations against ONE published ``ModelCard``.
+
+    Semantically equivalent to ``[verify(a, q, card) for a, q in ...]`` —
+    every attestation gets its own full verification and its own
+    ``VerifyReport`` (one bad item never poisons its neighbors) — but the
+    per-card work is paid once for the whole batch: the card decode and
+    its content address, the LUT-digest audit against the verifier's
+    local tables, and the deterministic audit-selector recomputation per
+    distinct ``(policy, n_layers)``.  ``policies`` may be one policy for
+    the whole batch, a parallel per-item sequence, or None.
+    """
+    t0 = time.monotonic()
+    n = len(attestations)
+    assert len(queries) == n, "attestations/queries length mismatch"
+    if isinstance(model_card, (bytes, bytearray, memoryview)):
+        try:
+            model_card = ModelCard.from_bytes(bytes(model_card))
+        except codec.CodecError as e:
+            rep = _reject(f"model card decode failed: {e}", t0)
+            return [rep] * n
+    if policies is None or isinstance(policies, VerifyPolicy):
+        policies = [policies] * n
+    assert len(policies) == n, "attestations/policies length mismatch"
+    shared: Dict = {}
+    return [verify(att, q, model_card, policy=pol, _shared=shared)
+            for att, q, pol in zip(attestations, queries, policies)]

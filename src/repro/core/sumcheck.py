@@ -25,17 +25,44 @@ from .transcript import Transcript
 
 from repro.kernels import ops as KOPS
 
-# Optional cross-claim round batcher (runtime/engine.py installs one when a
+# Optional cross-claim round batchers (runtime/engine.py installs one when a
 # thread fleet proves layers concurrently on the fused kernel path).  Worker
-# threads register with it; their sum-check claims are then coalesced into
-# multi-claim kernel launches.  Threads that never registered fall through
-# to the direct path, so a global hook is safe.
-_ROUND_BATCHER = None
+# threads register with a batcher; their sum-check claims are then coalesced
+# into multi-claim kernel launches.  Threads that never registered fall
+# through to the direct path.  Several engines may prove concurrently (the
+# gateway's resident service), so the hook is a tuple of active batchers —
+# replaced atomically under a lock, read lock-free — and a thread is routed
+# to the one batcher it registered with.
+_ROUND_BATCHERS: tuple = ()
+_BATCHER_LOCK = None
+
+
+def _batcher_lock():
+    global _BATCHER_LOCK
+    if _BATCHER_LOCK is None:
+        import threading
+        _BATCHER_LOCK = threading.Lock()
+    return _BATCHER_LOCK
+
+
+def add_round_batcher(batcher) -> None:
+    global _ROUND_BATCHERS
+    with _batcher_lock():
+        _ROUND_BATCHERS = _ROUND_BATCHERS + (batcher,)
+
+
+def remove_round_batcher(batcher) -> None:
+    global _ROUND_BATCHERS
+    with _batcher_lock():
+        _ROUND_BATCHERS = tuple(b for b in _ROUND_BATCHERS
+                                if b is not batcher)
 
 
 def set_round_batcher(batcher) -> None:
-    global _ROUND_BATCHER
-    _ROUND_BATCHER = batcher
+    """Legacy single-batcher hook: replace the active set wholesale."""
+    global _ROUND_BATCHERS
+    with _batcher_lock():
+        _ROUND_BATCHERS = () if batcher is None else (batcher,)
 
 
 @jax.jit
@@ -134,9 +161,9 @@ def _prove_fused(factors: Sequence[jnp.ndarray], transcript: Transcript
     fold) run as Pallas launches under one jit, transcripts byte-identical
     to the reference loop above (exact mod-p arithmetic is order-free and
     the kernel replicates the sponge schedule element-for-element)."""
-    batcher = _ROUND_BATCHER
-    if batcher is not None and batcher.registered():
-        return batcher.prove(tuple(factors), transcript)
+    for batcher in _ROUND_BATCHERS:
+        if batcher.registered():
+            return batcher.prove(tuple(factors), transcript)
     rp, pts, finals, states = KOPS.sumcheck_prove_rounds(
         tuple(factors), transcript.state)
     transcript.set_state(states[0])

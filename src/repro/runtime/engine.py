@@ -270,6 +270,14 @@ class EngineReport:
     cache_misses: int
 
 
+@dataclasses.dataclass
+class BatchEngineReport(EngineReport):
+    """EngineReport for a coalesced multi-query window (``prove_many``):
+    ``commit_seconds`` is the ONE shared boundary-commit pass for all
+    ``batch_size`` queries."""
+    batch_size: int = 1
+
+
 class ProverEngine:
     """Staged layerwise prover: forward replay → batched commit → parallel
     proof generation.  See module docstring for the stage breakdown."""
@@ -296,13 +304,15 @@ class ProverEngine:
         self._wt_commits: Optional[List[LP.WeightCommit]] = (
             list(wt_commits) if wt_commits is not None else None)
         self._pool = None
+        self._pool_lock = threading.Lock()
 
     # -- process-pool lifecycle (backend="process") -------------------------
     def _ensure_pool(self):
-        if self._pool is None:
-            ctx = multiprocessing.get_context("spawn")
-            self._pool = ctx.Pool(processes=self.workers)
-        return self._pool
+        with self._pool_lock:
+            if self._pool is None:
+                ctx = multiprocessing.get_context("spawn")
+                self._pool = ctx.Pool(processes=self.workers)
+            return self._pool
 
     def close(self):
         """Tear down the process pool (no-op for the thread backend)."""
@@ -337,15 +347,88 @@ class ProverEngine:
         return ForwardTrace(acts=acts, traces=traces)
 
     # -- stage 2: batched boundary commitment -------------------------------
-    def commit_boundaries(self, fwd: ForwardTrace) -> List[LP.BoundaryCommit]:
+    def _boundary_cfgs(self) -> List[B.BlockCfg]:
         L = len(self.cfgs)
         # boundary l is laid out by the config of the layer that consumes it
         # (its input side); the final boundary keeps the last layer's layout.
-        bnd_cfgs = [self.cfgs[0]] + [self.cfgs[min(l + 1, L - 1)]
-                                     for l in range(L)]
-        return LP.commit_boundaries(bnd_cfgs, fwd.acts, self.params)
+        return [self.cfgs[0]] + [self.cfgs[min(l + 1, L - 1)]
+                                 for l in range(L)]
+
+    def commit_boundaries(self, fwd: ForwardTrace) -> List[LP.BoundaryCommit]:
+        return LP.commit_boundaries(self._boundary_cfgs(), fwd.acts,
+                                    self.params)
+
+    def commit_boundaries_coalesced(self, fwds: Sequence[ForwardTrace]
+                                    ) -> List[List[LP.BoundaryCommit]]:
+        """Stage 2 for MANY queries in one pass (gateway coalescing).
+
+        The boundary activations of every query in the batch ride ONE
+        ``layer_proof.commit_boundaries`` call — same-width boundaries
+        across queries land in a single ``pcs.commit_batch`` NTT + Merkle
+        pass, so a K-query window costs one batched dispatch sequence
+        instead of K.  ``commit_batch`` is bit-identical to per-vector
+        ``commit``, hence every returned ``BoundaryCommit`` (roots,
+        packed ints, trees) equals the serial ``commit_boundaries`` result
+        for its query — the coalesced transcripts ARE the serial
+        transcripts.
+        """
+        bnd_cfgs = self._boundary_cfgs()
+        n = len(bnd_cfgs)
+        all_cfgs: List[B.BlockCfg] = []
+        all_acts: List[np.ndarray] = []
+        for fwd in fwds:
+            all_cfgs += bnd_cfgs
+            all_acts += fwd.acts
+        flat = LP.commit_boundaries(all_cfgs, all_acts, self.params)
+        return [flat[i * n:(i + 1) * n] for i in range(len(fwds))]
 
     # -- stage 3: parallel layer proving ------------------------------------
+    def _run_jobs(self, job_keys: Sequence, payload_fn
+                  ) -> Tuple[Dict, ScheduleStats]:
+        """Dispatch arbitrary prove-layer jobs over the worker fleet.
+
+        ``job_keys`` are hashable ids (a bare layer index, or a
+        ``(query, layer)`` tuple when several admitted queries share the
+        fleet); ``payload_fn(key)`` builds the ``_process_prove_layer``
+        payload.  Thread backend + fused kernels + a real fleet rendezvous
+        the workers' sum-check claims into multi-claim fused launches;
+        transcripts are per-claim sponge rows, so results are byte-identical
+        with or without the batcher.
+        """
+        batcher = None
+        if self.backend == "process":
+            pool = self._ensure_pool()
+
+            def prove_one(key) -> LP.LayerProof:
+                # the claiming thread blocks on its worker process; the
+                # queue/requeue protocol is unchanged across backends
+                return pool.apply(_process_prove_layer, (payload_fn(key),))
+        else:
+            batcher = (SumcheckRoundBatcher()
+                       if self.workers > 1 and KOPS.use_fused() else None)
+
+            def prove_one(key) -> LP.LayerProof:
+                if batcher is None:
+                    return _process_prove_layer(payload_fn(key))
+                batcher.register()
+                try:
+                    return _process_prove_layer(payload_fn(key))
+                finally:
+                    batcher.deregister()
+
+        sched = ProofScheduler(workers=self.workers,
+                               fail_claims=self.fail_claims)
+        if batcher is not None:
+            # additive install: concurrent proves (each with its own
+            # batcher) coexist — a worker thread is routed to the one
+            # batcher it registered with.
+            SC.add_round_batcher(batcher)
+            try:
+                return sched.run(list(job_keys), prove_one)
+            finally:
+                SC.remove_round_batcher(batcher)
+        return sched.run(list(job_keys), prove_one)
+
     def prove_layers(self, jobs: Sequence[ProofJob],
                      boundaries: List[LP.BoundaryCommit],
                      fwd: ForwardTrace
@@ -358,40 +441,7 @@ class ProverEngine:
                     boundaries[l + 1], fwd.traces[l], self.params,
                     job.check_input_range)
 
-        batcher = None
-        if self.backend == "process":
-            pool = self._ensure_pool()
-
-            def prove_one(l: int) -> LP.LayerProof:
-                # the claiming thread blocks on its worker process; the
-                # queue/requeue protocol is unchanged across backends
-                return pool.apply(_process_prove_layer, (payload(l),))
-        else:
-            # thread backend + fused kernels + a real fleet: rendezvous the
-            # workers' sum-check claims into multi-claim fused launches.
-            # Transcripts are per-claim sponge rows, so results are
-            # byte-identical with or without the batcher.
-            batcher = (SumcheckRoundBatcher()
-                       if self.workers > 1 and KOPS.use_fused() else None)
-
-            def prove_one(l: int) -> LP.LayerProof:
-                if batcher is None:
-                    return _process_prove_layer(payload(l))
-                batcher.register()
-                try:
-                    return _process_prove_layer(payload(l))
-                finally:
-                    batcher.deregister()
-
-        sched = ProofScheduler(workers=self.workers,
-                               fail_claims=self.fail_claims)
-        if self.backend == "thread" and batcher is not None:
-            SC.set_round_batcher(batcher)
-            try:
-                return sched.run([j.layer for j in jobs], prove_one)
-            finally:
-                SC.set_round_batcher(None)
-        return sched.run([j.layer for j in jobs], prove_one)
+        return self._run_jobs([j.layer for j in jobs], payload)
 
     # -- full pipeline ------------------------------------------------------
     def prove(self, x0: np.ndarray,
@@ -425,3 +475,55 @@ class ProverEngine:
             cache_hits=self.weight_cache.hits - hits0,
             cache_misses=self.weight_cache.misses - misses0)
         return proof, report
+
+    def prove_many(self, x0s: Sequence[np.ndarray],
+                   layer_subsets: Optional[Sequence[Sequence[int]]] = None
+                   ) -> Tuple[List[CH.ModelProof], BatchEngineReport]:
+        """Prove a WINDOW of queries with coalesced stage-2 commits.
+
+        All queries' boundary activations go through ONE batched
+        NTT/Merkle pass (``commit_boundaries_coalesced``) and every
+        ``(query, layer)`` proof job drains the SAME worker fleet in one
+        scheduler run — the gateway's cross-query coalescing point.
+        Fiat-Shamir determinism + the bit-identical batched commit mean
+        each returned ``ModelProof`` equals the one ``prove`` would have
+        produced for its query alone.
+        """
+        K = len(x0s)
+        hits0 = self.weight_cache.hits
+        misses0 = self.weight_cache.misses
+        wt_commits = self.wt_commits          # setup (cached/amortized)
+        t0 = time.monotonic()
+        fwds = [self.run_forward(np.asarray(x)) for x in x0s]
+        t1 = time.monotonic()
+        per_query_bounds = self.commit_boundaries_coalesced(fwds)
+        t2 = time.monotonic()
+        if layer_subsets is None:
+            layer_subsets = [list(range(len(self.cfgs)))] * K
+        subsets = [list(s) for s in layer_subsets]
+        assert len(subsets) == K
+
+        def payload(key):
+            qi, l = key
+            return (self.cfgs[l], l, wt_commits[l],
+                    per_query_bounds[qi][l], per_query_bounds[qi][l + 1],
+                    fwds[qi].traces[l], self.params, l == 0)
+
+        job_keys = [(qi, l) for qi, sub in enumerate(subsets) for l in sub]
+        done, stats = self._run_jobs(job_keys, payload)
+        t3 = time.monotonic()
+        proofs = [
+            CH.ModelProof(
+                layer_proofs=[done[(qi, l)] for l in subsets[qi]],
+                boundary_roots=[b.root for b in per_query_bounds[qi]],
+                wt_roots=[w.root for w in wt_commits])
+            for qi in range(K)]
+        report = BatchEngineReport(
+            batch_size=K,
+            forward_seconds=t1 - t0, commit_seconds=t2 - t1,
+            prove_seconds=t3 - t2, total_seconds=t3 - t0,
+            workers=stats.workers, jobs=stats.jobs, claims=stats.claims,
+            losses=stats.losses,
+            cache_hits=self.weight_cache.hits - hits0,
+            cache_misses=self.weight_cache.misses - misses0)
+        return proofs, report
