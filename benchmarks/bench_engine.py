@@ -33,7 +33,6 @@ def run(ci: bool = True, layers: int = 4, workers: int = None,
     if workers is None:
         workers = min(4, max(2, os.cpu_count() or 2))
     from repro.core import blocks as B
-    from repro.core import chain as CH
     from repro.core import pcs as PCS
     from repro.kernels import ops as KOPS
     from repro.runtime.engine import ProverEngine, WeightCommitCache
@@ -124,7 +123,7 @@ def run(ci: bool = True, layers: int = 4, workers: int = None,
             }
             print(f"kernel path {path}: {wall:.1f}s wall, "
                   f"{layers / report.prove_seconds:.3f} layer proofs/sec "
-                  f"(transcripts identical: "
+                  "(transcripts identical: "
                   f"{kernel_results[path]['identical_to_ref_transcripts']})",
                   flush=True)
     finally:
@@ -197,8 +196,6 @@ def run(ci: bool = True, layers: int = 4, workers: int = None,
     # coalesces each round into ONE window, so all N queries share one
     # batched boundary-commit pass — the per-query commit cost drop vs
     # the serial path is the headline number.
-    import threading
-
     from repro.gateway import AttestationGateway, GatewayConfig
     from repro.gateway.metrics import merge_batch_sizes
     n_gw = 4

@@ -1,5 +1,4 @@
 """Fisher-information estimation glue for the float models."""
-import numpy as np
 import jax
 import jax.numpy as jnp
 

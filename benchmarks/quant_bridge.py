@@ -67,11 +67,8 @@ def quantized_forward_logits(cfg_model, params, bcfgs, qweights, tokens,
     tokens: (B, S). Returns float logits; the block stack runs the EXACT
     integer pipeline (qops), i.e. the provable computation.
     """
-    import jax
-    from repro.models import model as MDL
-    from repro.models.layers import ShardCfg, apply_norm
+    from repro.models.layers import apply_norm
     B_, S = tokens.shape
-    sh = ShardCfg(dp=("data",), tp_size=1, dp_size=1)
     emb = np.asarray(params["embed"], np.float32)[np.asarray(tokens)]
     if cfg_model.pos_embed:
         emb = emb + np.asarray(params["pos"], np.float32)[

@@ -64,7 +64,8 @@ def run(ci: bool = False, out_dir: str = None):
     rows = []
     data = {}
     for path in sorted(glob.glob(os.path.join(out_dir, "*.json"))):
-        r = json.load(open(path))
+        with open(path) as f:
+            r = json.load(f)
         if r.get("status") != "ok":
             continue
         arch, shape, mesh = r["arch"], r["shape"], r["mesh"]

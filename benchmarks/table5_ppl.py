@@ -9,7 +9,6 @@ on the synthetic corpus, then evaluated three ways on held-out data:
 The paper's claim corresponds to float vs zk-lookup; we additionally
 report the stronger float vs quantized-pipeline delta.
 """
-import numpy as np
 import jax
 import jax.numpy as jnp
 
@@ -26,7 +25,6 @@ def _ppl_from_logits(logits, labels, vocab):
 
 def run(ci: bool = False, steps: int = None):
     from benchmarks import quant_bridge as QB
-    from repro.configs import get_arch
     from repro.data.pipeline import DataPipeline, SyntheticCorpus
     from repro.launch.train import TrainCfg, train
     from repro.models import model as MDL

@@ -65,12 +65,12 @@ def main():
 
     params = PCS.PCSParams(blowup=4, queries=policy.pcs_queries)
     rep = CH.soundness_bound([cfg], params)
-    print(f"5. soundness (Thm 3.1 accounting): eps_layer <= "
+    print("5. soundness (Thm 3.1 accounting): eps_layer <= "
           f"{min(rep.eps_layer, 1.0):.2g} at SMOKE params (queries=4 — "
           "demo speed, not security)")
     prod = PCS.PCSParams(blowup=8, queries=128)
     rep2 = CH.soundness_bound([cfg], prod)
-    print(f"   production params (blowup=8, queries=128): eps_layer <= "
+    print("   production params (blowup=8, queries=128): eps_layer <= "
           f"2^-{rep2.bits_layer:.0f}")
 
 

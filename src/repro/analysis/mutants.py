@@ -1,0 +1,234 @@
+"""Seeded-bug mutation corpus: proof that each analysis catches its class.
+
+A static analysis that has never seen its bug is a comment, not a gate.
+Each ``Mutant`` here monkeypatches one soundness bug into the live code
+(restored afterwards), reruns the relevant analysis, and requires a
+finding of the expected category.  The corpus is part of CI
+(``python -m repro.analysis --mutants``) so a refactor that silently
+blinds an analyzer fails the build the same way a real bug would.
+
+Replay mutants run the golden prove under the patch; the prove is
+*allowed* to crash (a mutated prover often fails its own verification) —
+detection is judged on the lint findings over the recorded events, never
+on the crash.  Range mutants re-analyze the patched jaxprs; JAX trace
+caches are cleared around them so the patched primitives actually
+retrace.
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+from typing import Callable, FrozenSet, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import field as F
+
+from . import Finding
+
+
+@dataclasses.dataclass
+class Mutant:
+    name: str
+    analysis: str                  # pass that must flag it
+    expect: FrozenSet[str]         # acceptable finding categories
+    patch: Callable                # contextmanager installing the bug
+    description: str
+
+
+@dataclasses.dataclass
+class MutantResult:
+    name: str
+    analysis: str
+    detected: bool
+    findings: List[Finding]
+    prove_error: Optional[str]
+
+
+# ---------------------------------------------------------------------------
+# fs mutants — run the golden prove with a broken prover
+# ---------------------------------------------------------------------------
+@contextlib.contextmanager
+def _patch_drop_absorb():
+    """Prover sends a tape value to the verifier without absorbing it:
+    the next challenge no longer depends on it (classic Frozen Heart)."""
+    from repro.core import circuit as C
+    orig = C.ProverCtx.put_value
+
+    def bad(self, val):
+        self.tape.append(("val", np.asarray(val)))
+        C._notify("on_tape", ctx=self, kind="val", payload=np.asarray(val))
+        return val                                   # tr.absorb dropped
+
+    C.ProverCtx.put_value = bad
+    try:
+        yield
+    finally:
+        C.ProverCtx.put_value = orig
+
+
+@contextlib.contextmanager
+def _patch_stuck_squeeze():
+    """Squeeze stops advancing the sponge: every subsequent challenge on
+    the transcript repeats.  Prover and verifier stay consistent (both
+    use the broken sponge), so only the lint can see it."""
+    from repro.core import transcript as T
+    orig = T._squeeze_impl
+
+    def bad(state, k):
+        _new_state, out = orig(state, k)
+        return state, out                            # state NOT advanced
+
+    T._squeeze_impl = bad
+    try:
+        yield
+    finally:
+        T._squeeze_impl = orig
+
+
+# ---------------------------------------------------------------------------
+# tape mutants
+# ---------------------------------------------------------------------------
+@contextlib.contextmanager
+def _patch_unconstrained_commit():
+    """An extra commitment is absorbed into the transcript but nothing is
+    ever claimed about it — free witness slots."""
+    from repro.core import circuit as C
+    orig = C.ProverCtx.finalize
+
+    def bad(self):
+        self.commit("mutant_unconstrained", np.arange(8, dtype=np.int64))
+        return orig(self)
+
+    C.ProverCtx.finalize = bad
+    try:
+        yield
+    finally:
+        C.ProverCtx.finalize = orig
+
+
+@contextlib.contextmanager
+def _patch_dropped_opening():
+    """finalize silently drops the last commitment's claims: those
+    evaluation claims never reach a PCS opening bundle."""
+    from repro.core import circuit as C
+    orig = C.ProverCtx.finalize
+
+    def bad(self):
+        if self.claims:
+            self.claims.popitem(last=True)
+        return orig(self)
+
+    C.ProverCtx.finalize = bad
+    try:
+        yield
+    finally:
+        C.ProverCtx.finalize = orig
+
+
+# ---------------------------------------------------------------------------
+# ranges mutants — re-analyze patched field primitives
+# ---------------------------------------------------------------------------
+@contextlib.contextmanager
+def _patch_wide_limbs():
+    """17-bit limb split in the 32x32->64 multiply: partial products reach
+    2^34 and wrap in uint32."""
+    orig = F._mul32_64
+    mask17 = jnp.uint32(0x1FFFF)
+
+    def bad(a, b):
+        a0 = a & mask17
+        a1 = a >> 17
+        b0 = b & mask17
+        b1 = b >> 17
+        ll = a0 * b0
+        lh = a0 * b1
+        hl = a1 * b0
+        hh = a1 * b1
+        mid = (ll >> 17) + (lh & mask17) + (hl & mask17)
+        lo = (ll & mask17) | ((mid & mask17) << 17)
+        hi = hh + (lh >> 17) + (hl >> 17) + (mid >> 17)
+        return hi, lo
+
+    F._mul32_64 = bad
+    jax.clear_caches()
+    try:
+        yield
+    finally:
+        F._mul32_64 = orig
+        jax.clear_caches()
+
+
+@contextlib.contextmanager
+def _patch_unreduced_add():
+    """fadd without the conditional subtract: outputs in [0, 2P-2], and
+    any add chain (NTT butterflies, sum-check folds) can overflow."""
+    orig = F.fadd
+
+    def bad(a, b):
+        return a + b
+
+    F.fadd = bad
+    jax.clear_caches()
+    try:
+        yield
+    finally:
+        F.fadd = orig
+        jax.clear_caches()
+
+
+MUTANTS: List[Mutant] = [
+    Mutant("drop-absorb", "fs", frozenset({"dropped-absorb"}),
+           _patch_drop_absorb,
+           "put_value sends a value without absorbing it"),
+    Mutant("stuck-squeeze", "fs",
+           frozenset({"stuck-squeeze", "challenge-reuse"}),
+           _patch_stuck_squeeze,
+           "squeeze no longer advances the sponge state"),
+    Mutant("wide-limbs", "ranges", frozenset({"u32-overflow"}),
+           _patch_wide_limbs,
+           "17-bit limb decomposition overflows uint32"),
+    Mutant("unreduced-add", "ranges",
+           frozenset({"fp-range", "u32-overflow"}),
+           _patch_unreduced_add,
+           "fadd skips the conditional reduction"),
+    Mutant("unconstrained-commit", "tape",
+           frozenset({"unconstrained-commitment"}),
+           _patch_unconstrained_commit,
+           "extra commitment with no claims"),
+    Mutant("dropped-opening", "tape", frozenset({"orphaned-claim"}),
+           _patch_dropped_opening,
+           "finalize drops the last commitment's openings"),
+]
+
+
+def run_mutant(m: Mutant) -> MutantResult:
+    from . import fs_lint, tape_lint
+    prove_error = None
+    with m.patch():
+        if m.analysis == "ranges":
+            from . import ranges
+            try:
+                findings = ranges.run()
+            except Exception as e:        # analyzer must not crash on bugs
+                return MutantResult(m.name, m.analysis, False, [],
+                                    f"analyzer crashed: {e!r}")
+        else:
+            from .replay import ReplayLog, run_golden_prove
+            log = ReplayLog()
+            try:
+                run_golden_prove(log)
+            except Exception as e:        # mutated provers may self-destruct
+                prove_error = repr(e)
+            checker = fs_lint if m.analysis == "fs" else tape_lint
+            findings = checker.replay_checks(log)
+    detected = any(f.analysis == m.analysis and f.category in m.expect
+                   for f in findings)
+    return MutantResult(m.name, m.analysis, detected, findings, prove_error)
+
+
+def run_corpus(only: Optional[str] = None) -> List[MutantResult]:
+    return [run_mutant(m) for m in MUTANTS
+            if only is None or m.name == only]

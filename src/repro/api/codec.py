@@ -199,8 +199,8 @@ def _enc(out: bytearray, obj: Any, strtab: dict) -> None:
         # single host-transfer point.
         try:
             a = np.asarray(obj)
-        except Exception:
-            raise TypeError(f"not wire-encodable: {type(obj)!r}")
+        except Exception as e:
+            raise TypeError(f"not wire-encodable: {type(obj)!r}") from e
         if a.dtype == object:
             raise TypeError(f"not wire-encodable: {type(obj)!r}")
         if not a.flags["C_CONTIGUOUS"]:
@@ -269,7 +269,7 @@ class _Reader:
         try:
             s = self.take(n >> 1).decode("utf-8")
         except UnicodeDecodeError as e:
-            raise CodecError(f"bad utf-8 string: {e}")
+            raise CodecError(f"bad utf-8 string: {e}") from e
         if s in self._seen:              # canonical form = always back-ref
             raise CodecError("non-canonical string literal")
         self._seen.add(s)
@@ -281,7 +281,7 @@ def _dtype(s: str) -> np.dtype:
     try:
         dt = np.dtype(s)
     except TypeError as e:
-        raise CodecError(f"bad dtype {s!r}: {e}")
+        raise CodecError(f"bad dtype {s!r}: {e}") from e
     if dt.hasobject:
         raise CodecError(f"refusing object dtype {s!r}")
     return dt
@@ -332,7 +332,7 @@ def _dec(r: _Reader) -> Any:
         try:
             return cls(**kwargs)
         except Exception as e:
-            raise CodecError(f"cannot rebuild {name}: {e}")
+            raise CodecError(f"cannot rebuild {name}: {e}") from e
     if tag == b"P":
         ndim = r.u8()
         if ndim > 32:
@@ -375,7 +375,8 @@ def decode_obj(data: bytes) -> Any:
     except CodecError:
         raise
     except Exception as e:  # hostile bytes must never escape as other types
-        raise CodecError(f"malformed wire data ({type(e).__name__}): {e}")
+        raise CodecError(
+            f"malformed wire data ({type(e).__name__}): {e}") from e
     if r.pos != len(data):
         raise CodecError("trailing bytes after value")
     return obj

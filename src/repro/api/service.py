@@ -14,6 +14,11 @@ the query (Eq. 3 binding), checks the commitment-chain adjacency, checks
 every layer proof against the card's published weight roots, and NEVER
 raises on malformed input: every failure is a ``VerifyReport`` with a
 reason string.
+
+Lock order (ranked in repro.analysis.locks): ``ProofService._lock`` is
+rank 20 — taken under the gateway lock (rank 10) only, and may be held
+while acquiring the engine pool, weight-cache, scheduler, batcher, or
+leaf telemetry locks (ranks 30+).
 """
 from __future__ import annotations
 
@@ -335,7 +340,7 @@ class _VerifySession:
             self.shared["model_id"] = card_id
         if info["model_id"] != card_id:
             return self._reject(
-                f"model id mismatch: attestation is for "
+                "model id mismatch: attestation is for "
                 f"{info['model_id']}, card is {card_id}")
         if not self.shared.get("lut_ok"):
             local_luts = _local_lut_digests()

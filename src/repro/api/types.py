@@ -298,7 +298,7 @@ class Attestation:
             raise
         except Exception as e:   # hostile head/frame shapes
             raise codec.CodecError(
-                f"malformed v2 attestation ({type(e).__name__}): {e}")
+                f"malformed v2 attestation ({type(e).__name__}): {e}") from e
         obj.__dict__["_layer_stores"] = stores
         return obj
 

@@ -17,7 +17,7 @@ import json
 import os
 import shutil
 import threading
-from typing import Any, Dict, Optional
+from typing import Dict, Optional
 
 import numpy as np
 import jax
@@ -120,7 +120,7 @@ def restore(tree_like, directory: str, step: Optional[int] = None,
         manifest = json.load(f)
     flat, treedef = jax.tree_util.tree_flatten_with_path(tree_like)
     leaves = []
-    for path, like in flat:
+    for path, _like in flat:
         key = "/".join(str(p) for p in path).replace("/", "__")
         arr = np.load(os.path.join(base, key + ".npy"))
         tag = manifest.get("dtypes", {}).get(key, str(arr.dtype))

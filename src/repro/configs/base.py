@@ -14,7 +14,7 @@ from __future__ import annotations
 
 import dataclasses
 import importlib
-from typing import Dict, Optional, Tuple
+from typing import Dict, Optional
 
 import jax
 import jax.numpy as jnp

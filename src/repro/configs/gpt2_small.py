@@ -2,7 +2,6 @@
 12L d=768 12H ff=3072 vocab=50257, LayerNorm + GELU + learned positions.
 Also exposes the paper's width-sweep variants (Table 3: d in
 {64,128,256,512,768}) through `width_variant`."""
-import dataclasses
 
 from repro.configs.base import ArchBundle
 from repro.models.model import LayerSpec, ModelCfg

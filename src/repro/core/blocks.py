@@ -25,7 +25,6 @@ import jax.numpy as jnp
 
 from . import circuit as C
 from . import field as Fld
-from . import luts as LUTS
 from . import qops as Q
 
 
@@ -569,8 +568,8 @@ def block_argument(ctx, cfg: BlockCfg, V: Views, Vw: Views,
     ls2 = 2 * log_seq
 
     # ---- LN1 ----
-    y1 = _ln_argument(ctx, cfg, V, Vw, "ln1", x_view, "g1",
-                      "be1" if cfg.has_bias else None)
+    _ln_argument(ctx, cfg, V, Vw, "ln1", x_view, "g1",
+                 "be1" if cfg.has_bias else None)
 
     # ---- QKV ----
     _mm_rescale(ctx, cfg, Vw.hi("wqT"), Vw.lo("wqT"), V.hi("ln1.y"),
@@ -618,7 +617,7 @@ def block_argument(ctx, cfg: BlockCfg, V: Views, Vw: Views,
     m_mult = Q.score_mult(dh)
     for h in range(H):
         kvh = h // group
-        acc_r = _score_mm(ctx, cfg, V, q_name, k_name, h, kvh, m_mult)
+        _score_mm(ctx, cfg, V, q_name, k_name, h, kvh, m_mult)
 
     # ---- softmax relations (batched over heads) ----
     mask_pub = C.Public(tuple(cfg.causal_mask.reshape(-1).tolist()), "mask")
@@ -664,8 +663,8 @@ def block_argument(ctx, cfg: BlockCfg, V: Views, Vw: Views,
                      log_n=log_d + log_seq)
 
     # ---- LN2 ----
-    y2 = _ln_argument(ctx, cfg, V, Vw, "ln2", V.limb("hmid"), "g2",
-                      "be2" if cfg.has_bias else None)
+    _ln_argument(ctx, cfg, V, Vw, "ln2", V.limb("hmid"), "g2",
+                 "be2" if cfg.has_bias else None)
 
     # ---- MLP ----
     _mm_rescale(ctx, cfg, Vw.hi("w1T"), Vw.lo("w1T"), V.hi("ln2.y"),

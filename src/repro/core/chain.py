@@ -122,24 +122,38 @@ def soundness_bound(cfgs: Sequence[B.BlockCfg], params: PCS.PCSParams
     * sum-checks: rounds * degree / |Fp4|      (Schwartz-Zippel per round)
     * LogUp: (witness + table) / |Fp4|         (pole collision on alpha)
     * linear relations: 1 claim point each: max_vars / |Fp4|
-    * Ligero PCS: ((1+rho)/2)^queries per opening session
+    * Ligero PCS: ((1+rho)/2 + b)^queries per opening session, where
+      b = n_cols/(4P) is the per-index total-variation bias of the
+      mod-n_cols reduction in Transcript.challenge_indices (a biased
+      query misses a bad column with probability at most TV more than a
+      uniform one, so b adds to the per-query miss probability);
+      n_cols is conservatively the encoded width of the LARGEST
+      commitment. The "index_bias" component reports the delta vs the
+      ideal uniform sampler — fs_lint asserts it stays negligible.
     * Poseidon2 collision resistance: 2^-124 (capacity 248 bits, birthday)
     """
     f4 = float(F.P) ** 4
     eps_total = 0.0
-    comp = dict(sumcheck=0.0, logup=0.0, relations=0.0, pcs=0.0)
+    comp = dict(sumcheck=0.0, logup=0.0, relations=0.0, pcs=0.0,
+                index_bias=0.0)
     for cfg in cfgs:
         st = layer_circuit_stats(cfg)
         e_sc = st["n_sumchecks"] * st["max_vars"] * 4 / f4
         e_lu = st["n_lookups"] * (st["witness"] + 2 ** 16) / f4
         e_rel = st["n_relations"] * st["max_vars"] / f4
         rho = 1.0 / params.blowup
+        n_cols_max = params.blowup * (
+            1 << ((st["witness"].bit_length() + 1) // 2))
+        bias = n_cols_max / (4.0 * float(F.P))
         e_pcs = st["n_openings"] * ((1 + rho) / 2) ** params.queries
+        e_bias = (st["n_openings"]
+                  * ((1 + rho) / 2 + bias) ** params.queries) - e_pcs
         comp["sumcheck"] += e_sc
         comp["logup"] += e_lu
         comp["relations"] += e_rel
         comp["pcs"] += e_pcs
-        eps_total += e_sc + e_lu + e_rel + e_pcs
+        comp["index_bias"] += e_bias
+        eps_total += e_sc + e_lu + e_rel + e_pcs + e_bias
     L = len(cfgs)
     negl_hash = (L + 2) * 2.0 ** -124
     eps_total += negl_hash

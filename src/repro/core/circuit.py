@@ -38,11 +38,28 @@ from . import lookup as LK
 from . import luts as LUTS
 from . import pcs as PCS
 from . import sumcheck as SC
-from .mle import (eq_eval, eq_points, fsum, mle_eval_base, mle_eval_f4,
+from .mle import (eq_eval, eq_points, fsum, mle_eval_base,
                   partial_eval_cols, partial_eval_rows)
 from .transcript import Transcript
 
 INV2 = (F.P + 1) // 2    # field inverse of 2 as a canonical int
+
+# Analysis hook (repro.analysis.tape_lint): an observer watching commitment,
+# claim, witness-layout and opening events of every live context.  None in
+# production — each hook site is one ``is not None`` test.  Events carry the
+# ctx so the observer can separate prover from verifier runs.
+_OBSERVER = None
+
+
+def set_observer(observer) -> None:
+    """Install (or with None remove) the tape_lint circuit observer."""
+    global _OBSERVER
+    _OBSERVER = observer
+
+
+def _notify(event: str, **kw) -> None:
+    if _OBSERVER is not None:
+        getattr(_OBSERVER, event)(**kw)
 
 
 @functools.lru_cache(maxsize=None)
@@ -174,6 +191,8 @@ class _Ctx:
         if key in self._claim_cache:
             return jnp.asarray(self._claim_cache[key])
         value = self._leaf_claim_impl(com, point)
+        _notify("on_leaf_claim", ctx=self, com=com,
+                point=np.asarray(point), value=np.asarray(value))
         self.tr.absorb(value)
         self.claims.setdefault(com, []).append(
             (np.asarray(point), np.asarray(value)))
@@ -193,6 +212,8 @@ class _Ctx:
     def claim(self, v: View, point: jnp.ndarray) -> jnp.ndarray:
         """MLE evaluation claim of a view at `point`, decomposed to leaves."""
         if isinstance(v, Slice):
+            _notify("on_slice_claim", ctx=self, com=v.com,
+                    offset=v.offset, log_n=v.log_n)
             return self._leaf_claim(v.com, self._prefix_point(v, point))
         if isinstance(v, Affine):
             acc = _fc(v.const)
@@ -248,6 +269,8 @@ class ProverCtx(_Ctx):
         self.roots[name] = com.root
         self.shapes[name] = (com.log_r, com.log_c)
         self.tape.append(("root", name, com.root))
+        _notify("on_commit", ctx=self, name=name, root=np.asarray(com.root),
+                log_total=com.log_r + com.log_c, kind="int")
         self.tr.absorb(jnp.asarray(com.root))
 
     def commit_field(self, name: str, fvec: jnp.ndarray, aspect: int = 0):
@@ -257,6 +280,8 @@ class ProverCtx(_Ctx):
         self.roots[name] = com.root
         self.shapes[name] = (com.log_r, com.log_c)
         self.tape.append(("root", name, com.root))
+        _notify("on_commit", ctx=self, name=name, root=np.asarray(com.root),
+                log_total=com.log_r + com.log_c, kind="field")
         self.tr.absorb(jnp.asarray(com.root))
 
     def attach(self, name: str, com: PCS.Commitment, ints: np.ndarray):
@@ -265,6 +290,8 @@ class ProverCtx(_Ctx):
         self.ints[name] = ints
         self.roots[name] = com.root
         self.shapes[name] = (com.log_r, com.log_c)
+        _notify("on_commit", ctx=self, name=name, root=np.asarray(com.root),
+                log_total=com.log_r + com.log_c, kind="attach")
         self.tr.absorb(jnp.asarray(com.root))
 
     def _leaf_claim_impl(self, com: str, point: jnp.ndarray) -> jnp.ndarray:
@@ -300,9 +327,11 @@ class ProverCtx(_Ctx):
 
     def put(self, obj):
         self.tape.append(("obj", obj))
+        _notify("on_tape", ctx=self, kind="obj", payload=obj)
 
     def put_value(self, val: jnp.ndarray) -> jnp.ndarray:
         self.tape.append(("val", np.asarray(val)))
+        _notify("on_tape", ctx=self, kind="val", payload=np.asarray(val))
         self.tr.absorb(val)
         return val
 
@@ -315,6 +344,8 @@ class ProverCtx(_Ctx):
             bundle = PCS.prove_openings(self.coms[name], points, self.tr,
                                         self.params, values=values)
             self.tape.append(("open", name, bundle))
+            _notify("on_open", ctx=self, name=name, n_points=len(points))
+        _notify("on_finalize", ctx=self)
         return self.tape
 
 
@@ -763,6 +794,8 @@ class WitnessBuilder:
             ctx.commit(self.com_name, packed)
         else:
             ctx.commit(self.com_name, total)
+        _notify("on_witness_slices", ctx=ctx, com=self.com_name,
+                slices=dict(slices))
         return slices
 
     def run_checks(self, ctx, slices: Dict[str, Slice]):
@@ -880,7 +913,7 @@ def flush_lookups(ctx: Ctx, helper_name: str = "lkh", aspect: int = 0):
                 try:
                     counts = LK.check_dense_counts(obj[1], 256, n_i)
                 except LK.BadMultiplicities as e:
-                    raise ProofError(f"{req.what}: {e}")
+                    raise ProofError(f"{req.what}: {e}") from e
             ctx.tr.absorb(F.f_from_int(counts))
             infos.append(counts)
         else:
@@ -898,7 +931,7 @@ def flush_lookups(ctx: Ctx, helper_name: str = "lkh", aspect: int = 0):
                     support, counts = LK.check_sparse_counts(
                         obj[1], obj[2], LUTS.LUT_SIZE, n_i)
                 except LK.BadMultiplicities as e:
-                    raise ProofError(f"{req.what}: {e}")
+                    raise ProofError(f"{req.what}: {e}") from e
             ctx.tr.absorb(F.f_from_int(support))
             ctx.tr.absorb(F.f_from_int(counts))
             infos.append((support, counts))
@@ -958,6 +991,12 @@ def flush_lookups(ctx: Ctx, helper_name: str = "lkh", aspect: int = 0):
         ctx.check_eq(eq_eval(r, rho), finals[0], f"{req.what} eq factor")
         a_rho = PCS.combine_f4_values([ctx.claim(s, rho) for s in coeffs])
         ctx.check_eq(a_rho, finals[1], f"{req.what} inverse column")
+        # The range8 witness tie claims the FULL commitment; tag it so
+        # tape_lint does not count it as constraining individual slices
+        # (a slice with ONLY this claim is range-checked but otherwise
+        # unconstrained — exactly the bug class the lint must flag).
+        if req.kind == "range8":
+            _notify("on_range_tie", ctx=ctx, com=req.idx.com)
         w_rho = ctx.claim(req.idx, rho)
         if req.kind == "lut":
             w_rho = F.f4add(w_rho, F.f4mul(betas[i], ctx.claim(req.out, rho)))

@@ -276,3 +276,45 @@ def np_mulmod(a, b):
 
 def np_addmod(a, b):
     return (np.asarray(a, np.int64) + np.asarray(b, np.int64)) % P
+
+
+# ---------------------------------------------------------------------------
+# Static-analysis metadata, consumed by ``repro.analysis.ranges``.
+# ---------------------------------------------------------------------------
+# Multiplications by these literal uint32 constants wrap mod 2^32 BY DESIGN:
+# Montgomery reduction computes m = lo * (-P^-1) mod 2^32 (see fmul). The
+# interval analyzer treats a possible wrap in any OTHER multiply as a
+# finding, so intended wraps must be registered here.
+WRAP_OK_CONSTANTS = frozenset({NEG_P_INV})
+
+# Declared input bounds per primitive: name -> dict(fn, args, out).
+#   args: tuple of (kind, shape) pairs; kinds are
+#     "fp"  — Montgomery field element, canonical range [0, P)
+#     "u32" — arbitrary machine word, [0, 2^32)
+#   out: "fp" (every output must provably stay < P) or None (unchecked).
+# ranges.py traces each fn to a jaxpr with its arguments bounded as
+# declared and proves no integer intermediate can exceed its dtype — this
+# registry is what turns the ``# < 2P, no uint32 overflow`` comments above
+# into machine-checked facts.
+ANALYSIS_BOUNDS = {
+    "fmul": dict(fn=lambda a, b: fmul(a, b),
+                 args=(("fp", (8,)), ("fp", (8,))), out="fp"),
+    "fadd": dict(fn=lambda a, b: fadd(a, b),
+                 args=(("fp", (8,)), ("fp", (8,))), out="fp"),
+    "fsub": dict(fn=lambda a, b: fsub(a, b),
+                 args=(("fp", (8,)), ("fp", (8,))), out="fp"),
+    "fneg": dict(fn=lambda a: fneg(a), args=(("fp", (8,)),), out="fp"),
+    "finv": dict(fn=lambda a: finv(a), args=(("fp", (8,)),), out="fp"),
+    "to_mont": dict(fn=lambda x: to_mont(x), args=(("fp", (8,)),), out="fp"),
+    "from_mont": dict(fn=lambda a: from_mont(a),
+                      args=(("fp", (8,)),), out="fp"),
+    "f4_from_base": dict(fn=lambda a: f4_from_base(a),
+                         args=(("fp", (8,)),), out="fp"),
+    "f4mul": dict(fn=lambda a, b: f4mul(a, b),
+                  args=(("fp", (8, 4)), ("fp", (8, 4))), out="fp"),
+    "f4inv": dict(fn=lambda a: f4inv(a), args=(("fp", (8, 4)),), out="fp"),
+    # Tightness witness: even for FULL-range uint32 operands the limb
+    # product's hi word peaks at exactly 2^32 - 1 — no headroom, no wrap.
+    "_mul32_64": dict(fn=lambda a, b: _mul32_64(a, b),
+                      args=(("u32", (8,)), ("u32", (8,))), out=None),
+}

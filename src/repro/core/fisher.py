@@ -17,7 +17,7 @@ against economically-motivated adversaries, not a cryptographic guarantee
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Dict, List, Sequence
+from typing import Callable, List, Sequence
 
 import numpy as np
 import jax
@@ -58,7 +58,7 @@ def fisher_from_logprob_fn(logprob_fn: Callable, layer_params: List,
     sizes = np.array([sum(np.size(x) for x in jax.tree_util.tree_leaves(p))
                       for p in layer_params], dtype=np.float64)
     grad_fn = jax.grad(logprob_fn)
-    for s in range(n_samples):
+    for _s in range(n_samples):
         rng, sub = jax.random.split(rng)
         g = grad_fn(layer_params, inputs, sub)
         for l in range(n_layers):

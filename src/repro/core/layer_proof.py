@@ -14,10 +14,9 @@ from __future__ import annotations
 
 import dataclasses
 import pickle
-from typing import Dict, List, Optional, Tuple
+from typing import Dict, List, Optional
 
 import numpy as np
-import jax.numpy as jnp
 
 from . import blocks as B
 from . import circuit as C

@@ -19,7 +19,6 @@ from typing import List, Tuple
 import numpy as np
 import jax.numpy as jnp
 
-from . import field as F
 from . import sumcheck as SC
 from .mle import mle_eval_base, partial_eval_cols, partial_eval_rows
 from .transcript import Transcript

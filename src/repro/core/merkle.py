@@ -12,7 +12,6 @@ from typing import List
 import numpy as np
 import jax.numpy as jnp
 
-from . import field as F
 from . import poseidon2 as P2
 
 from repro.kernels import ops as KOPS
@@ -150,7 +149,7 @@ def _multiproof_node_positions(indices: np.ndarray, depth: int):
     """Canonical (level, position) list of non-derivable sibling nodes."""
     known = sorted({int(i) for i in indices})
     needed = []
-    for d in range(depth):
+    for _d in range(depth):
         kset = set(known)
         level_needed = sorted({p ^ 1 for p in kset} - kset)
         needed.append(level_needed)
@@ -235,7 +234,7 @@ def verify_multiproof(root: np.ndarray, mp: MerkleMultiProof) -> bool:
     digests = {int(i): P2.hash_elems(jnp.asarray(leaves[k]))
                for k, i in enumerate(idx)}
     cursor = 0
-    for d in range(mp.depth):
+    for _d in range(mp.depth):
         kset = set(digests)
         level_needed = sorted({p ^ 1 for p in kset} - kset)
         for p in level_needed:

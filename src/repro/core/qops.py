@@ -18,7 +18,6 @@ Conventions:
 """
 from __future__ import annotations
 
-import dataclasses
 import math
 from typing import Dict, Optional
 

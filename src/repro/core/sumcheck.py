@@ -8,11 +8,15 @@ Per-round degree equals the number of factors (<= 3 in this codebase:
 Variables are bound from the most-significant index bit downward; the final
 point is reported MSB-first, i.e. point[0] corresponds to the most
 significant index bit — the global convention of mle.py.
+
+Lock order (ranked in repro.analysis.locks): the module-level
+``_BATCHER_LOCK`` guarding the batcher registry is rank 60 — it may be
+acquired while engine/scheduler locks (ranks <= 50) are held, and only
+rank-70 leaf locks may be taken while holding it.
 """
 from __future__ import annotations
 
 import dataclasses
-import functools
 from typing import List, Sequence, Tuple
 
 import numpy as np
@@ -176,7 +180,6 @@ def _prove_fused(factors: Sequence[jnp.ndarray], transcript: Transcript
 def _lagrange_eval(g: jnp.ndarray, c: jnp.ndarray) -> jnp.ndarray:
     """Evaluate the degree-d poly given by evals g at X=0..d, at Fp4 point c."""
     dp1 = g.shape[0]
-    d = dp1 - 1
     # weights w_i = prod_{j != i} (i - j)  (small ints, exact)
     terms = []
     for i in range(dp1):

@@ -12,7 +12,7 @@ stream (used to train the tiny accuracy models for Tables 2/5/7); swap
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Iterator, Optional, Tuple
+from typing import Dict, Iterator, Tuple
 
 import numpy as np
 

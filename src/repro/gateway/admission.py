@@ -14,6 +14,10 @@ of queued tickets that share ``pcs_queries`` (the PCS-parameter knob that
 fixes the commitment shape), waiting up to the window duration for
 late-arriving peers so concurrent queries can share one batched
 boundary-commit pass.
+
+Lock order (ranked in repro.analysis.locks): ``AdmissionQueue._cv`` is
+a rank-70 leaf — no other lock in the stack is ever acquired while it
+is held.
 """
 from __future__ import annotations
 

@@ -21,6 +21,11 @@ it a multi-client service (ROADMAP item 4):
 
 The network transport over this object lives in ``transport.py``
 (``gateway.serve()`` starts it).
+
+Lock order (ranked in repro.analysis.locks): ``AttestationGateway._lock``
+is rank 10, the outermost lock of the stack — it may be held while
+calling into the service/engine layers (ranks 20+) but must never be
+acquired while any other repro lock is held.
 """
 from __future__ import annotations
 

@@ -5,6 +5,9 @@ Python under one lock — the gateway's hot path is dominated by proving
 (seconds per query), so metric overhead is irrelevant; what matters is
 that ``snapshot()`` is always JSON-serializable and cheap enough to call
 from a live admin endpoint or fold into ``BENCH_engine.json``.
+
+Lock order (ranked in repro.analysis.locks): ``GatewayMetrics._lock``
+is a rank-70 leaf — no other lock is ever acquired while it is held.
 """
 from __future__ import annotations
 

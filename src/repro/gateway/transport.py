@@ -17,6 +17,10 @@ carrying the stable reason code (``queue_full`` / ``client_limit`` /
 ``shutting_down`` / ``bad_request``) and a human-readable detail.  The
 server enforces read timeouts and a per-connection request-size cap; the
 client enforces response timeouts and a buffered-unverified-bytes cap.
+
+Lock order (ranked in repro.analysis.locks): ``GatewayServer._lock``
+(connection registry) is a rank-70 leaf — no other lock is ever
+acquired while it is held.
 """
 from __future__ import annotations
 
@@ -384,7 +388,7 @@ class GatewayClient:
         wire = b"".join(parts)
         if info.get("size_bytes") != len(wire):
             raise TransportError(
-                f"attestation size mismatch: announced "
+                "attestation size mismatch: announced "
                 f"{info.get('size_bytes')}, received {len(wire)}")
         return wire, info
 

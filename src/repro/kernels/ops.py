@@ -26,7 +26,6 @@ import functools
 import os
 
 import jax
-import jax.numpy as jnp
 
 from . import modmatmul as _mm
 from . import ntt_kernel as _ntt
@@ -118,3 +117,50 @@ def partial_eval_cols_mm(mat, r_cols, **kw):
     from repro.core.mle import eq_points
     kw.setdefault("interpret", not on_tpu())
     return _partial_cols_impl(mat, eq_points(r_cols), kw["interpret"])
+
+
+# ---------------------------------------------------------------------------
+# Static-analysis entry registry, consumed by ``repro.analysis.ranges``.
+#
+# Every public kernel entry point above must appear here with its declared
+# input bounds; the analyzer traces each fn to a jaxpr (through the real
+# pallas_call for kernels that always launch one, and through the
+# interpret-path jnp bodies otherwise) and proves no uint32 intermediate
+# can overflow. Arg kinds: "fp" = Montgomery element < P, "u32" = any
+# word, "state" = sponge state (Fp lanes). Shapes are small on purpose —
+# the arithmetic schedule (and hence the interval flow) is shape-uniform,
+# while interpret-mode pallas tracing costs seconds per distinct shape.
+# ---------------------------------------------------------------------------
+def _ae(fn, *args, out="fp", pallas=False):
+    return dict(fn=fn, args=args, out=out, pallas=pallas)
+
+
+ANALYSIS_ENTRIES = {
+    "modmatmul": _ae(lambda a, b: modmatmul(a, b),
+                     ("fp", (8, 8)), ("fp", (8, 8)), pallas=True),
+    "poseidon2_permute": _ae(lambda s: poseidon2_permute(s),
+                             ("fp", (8, 16)), pallas=True),
+    "poseidon2_compress": _ae(lambda l, r: poseidon2_compress(l, r),
+                              ("fp", (8, 8)), ("fp", (8, 8))),
+    "poseidon2_compress_pallas": _ae(
+        lambda l, r: poseidon2_compress(l, r, force_pallas=True),
+        ("fp", (8, 8)), ("fp", (8, 8)), pallas=True),
+    "poseidon2_hash": _ae(lambda x: poseidon2_hash(x), ("fp", (8, 24))),
+    "poseidon2_hash_pallas": _ae(
+        lambda x: poseidon2_hash(x, force_pallas=True),
+        ("fp", (8, 24)), pallas=True),
+    "ntt": _ae(lambda x: ntt(x), ("fp", (8, 16))),
+    "ntt_inverse": _ae(lambda x: ntt(x, inverse=True), ("fp", (8, 16))),
+    "ntt_pallas": _ae(lambda x: ntt(x, force_pallas=True),
+                      ("fp", (8, 16)), pallas=True),
+    "sumcheck_fold": _ae(
+        lambda f0, f1, c: sumcheck_fold((f0, f1), c),
+        ("fp", (16, 4)), ("fp", (16, 4)), ("fp", (4,)), pallas=True),
+    "sumcheck_prove_rounds": _ae(
+        lambda f0, f1, st: sumcheck_prove_rounds((f0, f1), st),
+        ("fp", (8, 4)), ("fp", (8, 4)), ("fp", (16,))),
+    "partial_eval_rows_mm": _ae(lambda m, r: partial_eval_rows_mm(m, r),
+                                ("fp", (8, 8)), ("fp", (3, 4)), pallas=True),
+    "partial_eval_cols_mm": _ae(lambda m, r: partial_eval_cols_mm(m, r),
+                                ("fp", (8, 8)), ("fp", (3, 4)), pallas=True),
+}

@@ -34,7 +34,6 @@ from jax.sharding import NamedSharding, PartitionSpec as P  # noqa: E402
 from repro.configs import ARCHS, SHAPES, get_arch  # noqa: E402
 from repro.launch.mesh import make_production_mesh, mesh_axes  # noqa: E402
 from repro.models import model as MDL  # noqa: E402
-from repro.models.layers import ShardCfg  # noqa: E402
 from repro.optim import adamw  # noqa: E402
 
 # TPU v5e constants for the roofline terms (per chip).

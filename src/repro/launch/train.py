@@ -13,23 +13,17 @@ from __future__ import annotations
 
 import argparse
 import dataclasses
-import os
 import time
-from functools import partial
-from typing import Any, Dict, Optional
+from typing import Any, Dict
 
-import numpy as np
 import jax
 import jax.numpy as jnp
-from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.checkpoint import checkpoint as ckpt
 from repro.configs import get_arch
 from repro.data.pipeline import DataPipeline, SyntheticCorpus
-from repro.launch.mesh import make_debug_mesh, make_production_mesh, \
-    mesh_axes
+from repro.launch.mesh import make_debug_mesh, mesh_axes
 from repro.models import model as MDL
-from repro.models.layers import ShardCfg
 from repro.optim import adamw, compression
 from repro.runtime.fault import HeartbeatMonitor
 
@@ -104,11 +98,6 @@ def train(arch: str, train_cfg: TrainCfg, smoke: bool = True,
     pipeline = DataPipeline(SyntheticCorpus(cfg.vocab, train_cfg.seed),
                             train_cfg.batch, train_cfg.seq)
     monitor = HeartbeatMonitor(["host0"])
-
-    p_specs = MDL.specs(cfg, sh, train_cfg.scan_layers)
-    ns = jax.tree_util.tree_map(
-        lambda s: NamedSharding(mesh, s), p_specs,
-        is_leaf=lambda s: isinstance(s, P))
 
     with mesh:
         params = MDL.init(cfg, sh, rng, train_cfg.scan_layers)

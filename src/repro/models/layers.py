@@ -25,7 +25,7 @@ from __future__ import annotations
 
 import dataclasses
 import math
-from typing import Any, Dict, List, Optional, Sequence, Tuple
+from typing import Any, Dict, Optional, Tuple
 
 import numpy as np
 import jax
@@ -223,7 +223,6 @@ def attn_defs(cfg: AttnCfg, sh: ShardCfg) -> Dict[str, ParamDef]:
     tp = sh.tp if cfg.heads % sh.tp_size == 0 and sh.attn_tp else None
     kv_tp = sh.tp if cfg.kv_heads % sh.tp_size == 0 and sh.attn_tp else None
     qd, kvd = cfg.heads * cfg.dh, cfg.kv_heads * cfg.dh
-    fs = ShardCfg.fs
     scale = 1.0 / math.sqrt(cfg.d)
     defs = {
         "wq": ParamDef((cfg.d, qd), P(sh.fs(cfg.d), tp), scale),

@@ -10,9 +10,8 @@ from __future__ import annotations
 
 import dataclasses
 import math
-from typing import Any, Dict, List, Optional, Sequence, Tuple
+from typing import Any, Dict, List, Optional, Tuple
 
-import numpy as np
 import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P

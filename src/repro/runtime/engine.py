@@ -24,6 +24,12 @@ Proving is Fiat-Shamir deterministic, so the engine's output is
 bit-identical across worker counts: ``workers=1`` reproduces the seed's
 sequential transcripts exactly, and ``workers>=2`` produces the same
 proofs faster.  chain.prove_model is now a thin wrapper over this engine.
+
+Lock order (ranked in repro.analysis.locks): ``ProverEngine._pool_lock``
+is rank 30 and ``WeightCommitCache._lock`` rank 40 — both may be taken
+under the service lock (rank 20) and may be held while acquiring the
+scheduler lock (rank 50) or ``SumcheckRoundBatcher._cv`` (rank 60);
+``_cv`` itself only ever wraps rank-70 leaves.
 """
 from __future__ import annotations
 

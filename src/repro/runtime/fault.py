@@ -17,13 +17,17 @@ Three mechanisms, designed for 1000+ node fleets:
    §3.3), so prover fault-tolerance is a simple redo: a lost worker's
    layer is re-queued. This is a systems BENEFIT of the paper's
    layerwise decomposition and is exercised in tests/test_fault.py.
+
+Lock order (ranked in repro.analysis.locks): ``ProofWorkReplayQueue._lock``
+is a rank-70 leaf — queue bookkeeping only, no other lock is ever
+acquired while it is held.
 """
 from __future__ import annotations
 
 import dataclasses
 import threading
 import time
-from collections import defaultdict, deque
+from collections import deque
 from typing import Callable, Dict, List, Optional, Set
 
 

@@ -13,6 +13,11 @@ Fault injection: ``fail_claims`` is a set of global claim sequence numbers
 (0-based, in queue claim order) that are dropped as if the claiming worker
 crashed after claiming but before completing.  Tests use this to exercise
 the requeue-on-loss path deterministically.
+
+Lock order (ranked in repro.analysis.locks): the local ``lock`` in
+``run()`` (errors/busy bookkeeping) is rank 50 — it may be taken while
+engine locks (ranks <= 40) are held and may itself be held while the
+batcher (rank 60) or leaf (rank 70) locks are acquired.
 """
 from __future__ import annotations
 

@@ -1,7 +1,6 @@
 """Field arithmetic: exactness vs Python-int ground truth + ring axioms."""
 import numpy as np
 import jax.numpy as jnp
-import pytest
 from hypothesis_compat import given, settings, st
 
 from repro.core import field as F

@@ -2,7 +2,6 @@
 import numpy as np
 import jax.numpy as jnp
 import pytest
-from hypothesis_compat import given, settings, st
 
 from repro.core import field as F, ntt as N, poseidon2 as P2, merkle as M
 from repro.core.transcript import Transcript

@@ -1,6 +1,5 @@
 """Quantized reference ops: semantics + property-based invariants."""
 import numpy as np
-import pytest
 from hypothesis_compat import given, settings, st
 
 from repro.core import qops as Q

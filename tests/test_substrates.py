@@ -2,9 +2,7 @@
 import os
 
 import numpy as np
-import jax
 import jax.numpy as jnp
-import pytest
 from hypothesis_compat import given, settings, st
 
 from repro.checkpoint import checkpoint as ckpt
@@ -114,7 +112,7 @@ def test_resilient_step_replays():
 def test_proof_replay_queue():
     q = ProofWorkReplayQueue([0, 1, 2])
     a = q.claim("w1")
-    b = q.claim("w2")
+    q.claim("w2")
     q.worker_lost("w1")                  # layer `a` back to pending
     assert not q.finished
     q.complete("w2", "proof_b")

@@ -2,7 +2,6 @@
 import numpy as np
 import jax
 import jax.numpy as jnp
-import pytest
 
 from repro.launch.train import TrainCfg, train
 from repro.models.layers import (AttnCfg, MoeCfg, ShardCfg, attention,
@@ -58,12 +57,9 @@ def test_banded_attention_matches_dense_window():
     LY._banded_attention = lambda *a, **k: (_ for _ in ()).throw(
         AssertionError("should not be called"))
     try:
-        cfg_dense = AttnCfg(d=32, heads=2, kv_heads=2, dh=16, window=W,
-                            rope="none")
         # disable banded path by monkeypatching the condition: call the
         # dense code through a copy of attention with window masking
         LY._banded_attention = orig
-        import dataclasses
         # trick: make S <= 2*window false -> use the module-level dense
         # masked path by temporarily zeroing the banded branch
         dense_out = _dense_window_reference(cfg, p, x, pos)
